@@ -1,0 +1,56 @@
+"""§III-E analogue: energy efficiency (comparisons/joule) + EDP model.
+
+MODELED numbers (clearly labeled): throughput comes from the roofline of the
+two Hamming paths on TPU v5e; power from public TDPs; the paper's measured
+SmartSSD (23 W) and GTX1080Ti (238 W) rows are reproduced from its text for
+context. One "comparison" = one query x reference Hamming over Dhv=4096.
+
+  VPU path: packed XOR+popcount — memory-bound at 819 GB/s reading 512 B per
+            ref HV (amortised over Q_BLOCK queries) + ~10 int-ops/word.
+  MXU path: ±1 int8 matmul — compute-bound at 394 TOPS; 2*Dhv ops/comparison.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+DHV = 4096
+W = DHV // 32
+TPU_TDP = 200.0         # W, v5e-class chip budget (public board-level est.)
+VPU_INT_OPS = 9.6e12    # 8x128 lanes x 8 ALUs x ~940 MHz (order estimate)
+HBM = 819e9
+MXU_INT8 = 394e12
+
+
+def main():
+    q_block = 64
+    # --- VPU path: per comparison cost
+    ops = W * 10                       # xor + popcount + accumulate
+    bytes_per_cmp = (W * 4) / q_block  # ref words amortised over Q_BLOCK
+    t_compute = ops / VPU_INT_OPS
+    t_mem = bytes_per_cmp / HBM
+    vpu_cps = 1.0 / max(t_compute, t_mem)
+    emit("energy/model/tpu_vpu_cmp_per_joule", 0.0,
+         f"{vpu_cps / TPU_TDP:.3e} cmp/J ({vpu_cps:.3e} cmp/s @ {TPU_TDP}W, "
+         f"{'mem' if t_mem > t_compute else 'compute'}-bound)")
+
+    # --- MXU path
+    mxu_cps = MXU_INT8 / (2 * DHV)
+    t_mem_mxu = bytes_per_cmp / HBM
+    mxu_cps = min(mxu_cps, 1.0 / t_mem_mxu)
+    emit("energy/model/tpu_mxu_cmp_per_joule", 0.0,
+         f"{mxu_cps / TPU_TDP:.3e} cmp/J ({mxu_cps:.3e} cmp/s)")
+
+    # --- paper-reported measurements (§III-E, reproduced verbatim as the
+    # comparison anchors; we cannot re-measure FPGA/GPU power offline)
+    emit("energy/paper/smartssd_power", 0.0, "23W measured (Vitis Analyzer)")
+    emit("energy/paper/gpu1080ti_power", 0.0, "238W measured (nvidia-smi)")
+    emit("energy/paper/reported_ratios", 0.0,
+         "RapidOMS vs ANN-SoLo 68x cmp/J; vs HyperOMS 11x cmp/J; "
+         "EDP 480x / 48x")
+    # our model's TPU-internal ratio: beyond-paper MXU path vs paper-faithful
+    emit("energy/model/mxu_vs_vpu_same_chip", 0.0,
+         f"{mxu_cps / vpu_cps:.2f}x cmp/J (same TDP, pure kernel-path gain)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Fig. 6c/d analogue: near-storage vs NAS-to-host data movement.
+
+The paper's point: NAS -> host -> accelerator copies bottleneck GPU OMS at
+~1.25 GB/s (10GbE @80%), while SmartSSD P2P streams at 6.4 GB/s with no host
+hop. On a TPU pod the reference DB is *resident* in sharded HBM, so steady-
+state search moves only (a) HBM->VMEM streams (819 GB/s/chip) and (b) a tiny
+ICI merge (16 B/query/shard).
+
+Two parts:
+  * MODELED (paper-parameter arithmetic, clearly labeled): time to move one
+    iPRG2012-scale encoded DB (1.16M x 512 B = 0.59 GB) and one HEK293 DB
+    (3M x 512 B = 1.54 GB) through each path.
+  * MEASURED on this host: host->device transfer vs device-resident reuse
+    for a DB shard, demonstrating the one-time-ingest-then-resident pattern.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+GBE10 = 1.25e9          # paper: 10GbE @ 80%
+P2P = 6.4e9             # paper: SmartSSD NVMe->FPGA P2P
+HBM = 819e9             # TPU v5e HBM per chip
+ICI = 50e9              # per link
+
+
+def modeled():
+    for name, rows in (("iprg2012", 1_160_000), ("hek293", 3_000_000)):
+        db_bytes = rows * (4096 // 8)  # packed Dhv=4096
+        emit(f"fig6cd/model/{name}/nas_to_host_gpu",
+             db_bytes / GBE10 * 1e6, f"db={db_bytes/2**30:.2f}GiB @1.25GB/s")
+        emit(f"fig6cd/model/{name}/smartssd_p2p",
+             db_bytes / P2P * 1e6, "@6.4GB/s (paper near-storage)")
+        # TPU: resident shards; per-search-pass streaming HBM->VMEM per chip
+        shard = db_bytes / 256
+        emit(f"fig6cd/model/{name}/tpu_hbm_stream_per_chip",
+             shard / HBM * 1e6, f"shard={shard/2**20:.1f}MiB @819GB/s")
+        merge = 16 * 256  # winner merge bytes per query across model axis
+        emit(f"fig6cd/model/{name}/tpu_ici_merge_per_query",
+             merge / ICI * 1e6, "16B x 256 shards")
+
+
+def measured():
+    rng = np.random.default_rng(0)
+    shard = rng.integers(0, 2**32, size=(65536, 128), dtype=np.uint64
+                         ).astype(np.uint32)  # 32 MiB
+
+    t0 = time.perf_counter()
+    dev = jnp.asarray(shard)
+    dev.block_until_ready()
+    t_copy = time.perf_counter() - t0
+
+    q = jnp.asarray(rng.integers(0, 2**32, size=(16, 128), dtype=np.uint64
+                                 ).astype(np.uint32))
+
+    from repro.core.packing import hamming_matrix_packed
+    f = jax.jit(lambda a, b: hamming_matrix_packed(a, b).sum())
+    f(q, dev).block_until_ready()
+    t0 = time.perf_counter()
+    f(q, dev).block_until_ready()
+    t_resident = time.perf_counter() - t0
+
+    emit("fig6cd/measured/host_to_device_copy", t_copy * 1e6,
+         f"{shard.nbytes/2**20:.0f}MiB — paid ONCE at ingest (near-storage "
+         f"pattern); a NAS->host->device flow pays it per working-set swap")
+    emit("fig6cd/measured/resident_search_pass", t_resident * 1e6,
+         "per-batch search touches only resident memory, zero re-copy bytes")
+
+
+def main():
+    modeled()
+    measured()
+
+
+if __name__ == "__main__":
+    main()

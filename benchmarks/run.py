@@ -1,0 +1,52 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig5,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import common
+
+MODULES = [
+    ("table1", "benchmarks.table1_oms_settings"),
+    ("table2", "benchmarks.table2_design_outline"),
+    ("fig5", "benchmarks.fig5_search_quality"),
+    ("fig6a", "benchmarks.fig6a_qblock_scaling"),
+    ("fig6e", "benchmarks.fig6e_threshold_sweep"),
+    ("fig6cd", "benchmarks.fig6_data_movement"),
+    ("energy", "benchmarks.energy_model"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                         + ",".join(k for k, _ in MODULES))
+    args = ap.parse_args()
+    wanted = set(args.only.split(",")) if args.only else None
+
+    common.header()
+    failures = 0
+    for key, modname in MODULES:
+        if wanted and key not in wanted:
+            continue
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{key},0.0,ERROR")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

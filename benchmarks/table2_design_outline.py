@@ -1,0 +1,57 @@
+"""Table II analogue: design parameters + on-chip memory budget.
+
+The paper reports FPGA resource utilisation (LUT/FF/BRAM/URAM) for
+MAX_R=4096, MAX_Q=2048, Q_BLOCK=16, Dhv=4096, FACTOR=16. The TPU analogue of
+"fits in URAM" is "the kernel working set fits VMEM (~128 MB on v5e)":
+
+    ref tile   MAX_R x (Dhv/32) uint32       (URAM-cached references)
+    query tile Q_BLOCK x (Dhv/32) uint32
+    popcount intermediate Q_BLOCK x MAX_R x word_tile int32  (FACTOR chunks)
+    running winners 4 x Q_BLOCK int32
+
+Emits the VMEM bytes for the paper's parameters and the sweep that picks our
+production tile (used by the fused Pallas kernel).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+VMEM_BYTES = 128 * 2**20
+
+
+def vmem_usage(max_r: int, q_block: int, dhv: int, factor: int) -> dict:
+    w = dhv // 32
+    wt = max(w // factor, 1)
+    ref_tile = max_r * w * 4
+    q_tile = q_block * w * 4
+    acc = q_block * max_r * 4               # int32 running sims
+    pop_inter = q_block * max_r * wt * 4    # popcount chunk intermediate
+    winners = 4 * q_block * 4
+    total = ref_tile + q_tile + acc + pop_inter + winners
+    return {"ref_tile": ref_tile, "q_tile": q_tile, "acc": acc,
+            "pop_inter": pop_inter, "total": total,
+            "vmem_frac": total / VMEM_BYTES}
+
+
+def main():
+    paper = vmem_usage(max_r=4096, q_block=16, dhv=4096, factor=16)
+    emit("table2/paper_params", 0.0,
+         f"MAX_R=4096 Q_BLOCK=16 Dhv=4096 FACTOR=16 "
+         f"vmem={paper['total']/2**20:.1f}MiB frac={paper['vmem_frac']:.3f}")
+    # sweep: find the largest ref tile that keeps VMEM under 50% (double
+    # buffering headroom), per q_block
+    for qb in (16, 32, 64, 128):
+        best = None
+        for max_r in (1024, 2048, 4096, 8192, 16384, 32768):
+            u = vmem_usage(max_r, qb, 4096, 16)
+            if u["vmem_frac"] <= 0.5:
+                best = (max_r, u)
+        if best:
+            max_r, u = best
+            emit(f"table2/sweep_qblock{qb}", 0.0,
+                 f"best_MAX_R={max_r} vmem={u['total']/2**20:.1f}MiB "
+                 f"frac={u['vmem_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Quickstart: the paper's pipeline end-to-end in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import OMSConfig, OMSPipeline
+from repro.data.spectra import LibraryConfig, make_dataset
+
+# 1. A synthetic spectral library calibrated to the paper's Table I stats
+#    (scaled down) with planted post-translational modifications.
+dataset = make_dataset(LibraryConfig(n_refs=4096, n_queries=256, seed=0))
+
+# 2. Ingest: preprocess + HD-encode references (+ decoys), build the
+#    PMZ-sorted blocked DB — the paper's one-time near-storage step.
+cfg = OMSConfig(dim=4096, max_r=512, q_block=16, open_tol_da=75.0)
+pipe = OMSPipeline(cfg, dataset.refs)
+print(f"ingested {pipe.db.n_rows} rows into {pipe.db.n_blocks} blocks")
+
+# 3. Search: encode queries, blocked dual-window Hamming search, FDR filter.
+out = pipe.search(dataset.queries)
+
+src = np.asarray(dataset.query_source)
+mod = np.asarray(dataset.query_modified)
+open_hit = np.asarray(out.result.open_idx) == src
+std_hit = np.asarray(out.result.std_idx) == src
+
+print(f"open-search recall:      {open_hit.mean():.3f}")
+print(f"  on modified spectra:   {open_hit[mod].mean():.3f}  <- the OMS win")
+print(f"standard-search recall:  {std_hit.mean():.3f}")
+print(f"  on modified spectra:   {std_hit[mod].mean():.3f}  <- why OMS exists")
+print(f"identifications @1% FDR: {int(out.open_fdr.n_accepted)}/{len(src)}")

@@ -1,0 +1,21 @@
+"""Serve a (reduced) LM with prefill + batched greedy decode and KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mistral-nemo-12b]
+"""
+import argparse
+
+from repro.launch import serve as serve_launcher
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mistral-nemo-12b")
+    args = ap.parse_args()
+    serve_launcher.main([
+        "--arch", args.arch, "--smoke",
+        "--batch", "4", "--prompt-len", "32", "--gen", "16",
+    ])
+
+
+if __name__ == "__main__":
+    main()

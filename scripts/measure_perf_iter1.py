@@ -1,0 +1,66 @@
+"""§Perf measurement: before/after roofline terms for the hillclimb cells.
+Compiles each configuration on the single-pod mesh and runs the (fixed)
+trip-weighted HLO cost analysis."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "src")
+import json
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import make_cell, make_step_fn
+from repro.utils import hlo_cost
+
+def measure(arch, shape, tag, mutate=None):
+    if mutate:
+        mutate()
+    mesh = make_production_mesh()
+    cell = make_cell(arch, shape, mesh=mesh, n_microbatches=4)
+    step = make_step_fn(cell, n_microbatches=4)
+    sh = lambda t: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    j = jax.jit(step, in_shardings=tuple(sh(s) for s in cell.in_specs),
+                donate_argnums=cell.donate)
+    with mesh:
+        comp = j.lower(*cell.args).compile()
+    res = hlo_cost.analyze(comp.as_text())
+    t_c = res["flops"] / 197e12
+    t_m = res["bytes"] / 819e9
+    t_x = res["coll_total"] / 50e9
+    print(f"{tag:50s} tC={t_c:8.2f}s tM={t_m:8.2f}s tX={t_x:8.2f}s "
+          f"bound={max(t_c,t_m,t_x):8.2f}s "
+          f"coll={ {k: f'{v:.2e}' for k,v in res['coll'].items()} }")
+    jax.clear_caches()
+    return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+            "coll": res["coll"]}
+
+out = {}
+
+# --- target 1: xlstm train_4k, baseline (non-separable mLSTM) vs optimized
+import repro.models.xlstm as xl
+import functools
+_orig = xl.mlstm_parallel
+xl.mlstm_parallel = functools.partial(_orig, separable=False)
+out["xlstm_baseline"] = measure("xlstm-1.3b", "train_4k", "xlstm train_4k BASELINE (appendix-form mLSTM)")
+xl.mlstm_parallel = _orig
+out["xlstm_opt"] = measure("xlstm-1.3b", "train_4k", "xlstm train_4k OPT (chunkwise-separable mLSTM)")
+
+# --- target 2: dsv2lite train_4k, baseline (scatter-add combine) vs optimized
+import repro.models.moe as moe
+moe.COMBINE_MODE = "scatter_add"
+out["dsv2_baseline"] = measure("deepseek-v2-lite-16b", "train_4k", "dsv2lite train_4k BASELINE (scatter-add combine)")
+moe.COMBINE_MODE = "gather"
+out["dsv2_opt"] = measure("deepseek-v2-lite-16b", "train_4k", "dsv2lite train_4k OPT (gather combine)")
+
+# --- bonus: llama train_4k, baseline (no pad) vs optimized (pad heads)
+from repro.configs import registry
+cfg = registry.get_config("llama3.2-3b")
+registry._REGISTRY["llama3.2-3b"] = cfg.scaled(tp_pad_heads_to=0)
+out["llama_baseline"] = measure("llama3.2-3b", "train_4k", "llama train_4k BASELINE (24 heads replicated)")
+registry._REGISTRY["llama3.2-3b"] = cfg.scaled(tp_pad_heads_to=16)
+out["llama_opt"] = measure("llama3.2-3b", "train_4k", "llama train_4k OPT (pad 24->32, sharded heads)")
+
+json.dump(out, open("results/perf_iterations.json", "w"), indent=1)
+print("saved results/perf_iterations.json")

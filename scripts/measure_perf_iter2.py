@@ -1,0 +1,36 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys; sys.path.insert(0, "src")
+import json
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import make_cell, make_step_fn
+from repro.utils import hlo_cost
+
+def measure(arch, shape, tag):
+    mesh = make_production_mesh()
+    cell = make_cell(arch, shape, mesh=mesh, n_microbatches=4)
+    step = make_step_fn(cell, n_microbatches=4)
+    sh = lambda t: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    j = jax.jit(step, in_shardings=tuple(sh(s) for s in cell.in_specs),
+                donate_argnums=cell.donate)
+    with mesh:
+        comp = j.lower(*cell.args).compile()
+    res = hlo_cost.analyze(comp.as_text())
+    t_c, t_m, t_x = res["flops"]/197e12, res["bytes"]/819e9, res["coll_total"]/50e9
+    print(f"{tag:52s} tC={t_c:7.2f}s tM={t_m:7.2f}s tX={t_x:7.2f}s bound={max(t_c,t_m,t_x):7.2f}s")
+    print(f"   coll: { {k: f'{v:.2e}' for k,v in res['coll'].items()} }")
+    jax.clear_caches()
+    return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_x, "coll": res["coll"]}
+
+import repro.models.moe as moe
+out = {}
+moe.COMBINE_MODE = "scatter_add"
+out["dsv2_baseline_v3meter"] = measure("deepseek-v2-lite-16b", "train_4k", "dsv2lite BASELINE (scatter dispatch+combine), meter v3")
+moe.COMBINE_MODE = "gather"
+out["dsv2_opt2"] = measure("deepseek-v2-lite-16b", "train_4k", "dsv2lite OPT2 (gather dispatch+combine), meter v3")
+out["olmoe_opt2"] = measure("olmoe-1b-7b", "train_4k", "olmoe OPT2 (gather dispatch+combine), meter v3")
+json.dump(out, open("results/perf_iterations2.json", "w"), indent=1)

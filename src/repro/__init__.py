@@ -1,0 +1,17 @@
+"""repro: RapidOMS on TPU — a multi-pod JAX framework for HDC open-modification
+spectral library search, plus the assigned 10-architecture LM substrate.
+
+Layout:
+  repro.core        — the paper's contribution (HD encoding, blocked OMS search, FDR)
+  repro.kernels     — Pallas TPU kernels for the search/encode hot spots
+  repro.data        — synthetic spectra + LM token pipelines
+  repro.models      — 10 assigned architectures (dense/MoE/MLA/hybrid/SSM/enc-dec/VLM)
+  repro.optim       — AdamW + ZeRO-1 + gradient compression
+  repro.train/serve — step functions, loops, engines
+  repro.distributed — mesh, sharding rules, PP, elastic re-mesh, fault tolerance
+  repro.checkpoint  — sharded (async) checkpointing
+  repro.configs     — one config per assigned arch + the paper's OMS settings
+  repro.launch      — mesh/dryrun/train/serve/oms entry points
+"""
+
+__version__ = "1.0.0"

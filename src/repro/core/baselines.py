@@ -1,0 +1,117 @@
+"""Comparison baselines the paper evaluates against (§III-B/D).
+
+  * ``exhaustive`` HDC search — HyperOMS [Kang+ PACT'22]: identical HD
+    encoding + Hamming scoring, but *every* query is compared against *every*
+    reference (no PMZ block pruning). In this framework that is simply
+    ``SearchParams(exhaustive=True)``; re-exported here for discoverability.
+  * ``shifted_cosine`` — ANN-SoLo-style [Bittremieux+ JPR'18] scoring on
+    dense binned intensity vectors: standard cosine within the ppm window and
+    a *shifted* dot product for the open window, where fragment peaks may
+    match either at their own m/z or displaced by the precursor mass delta.
+  * ``spectrast_dot`` — SpectraST-style plain normalised dot product within
+    the standard window only (closed search).
+
+These are quality/runtime baselines for the Fig. 5 / Table I benchmarks; they
+run on modest library slices (they are O(Q·R·bins) dense).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.search import SearchParams
+
+
+def exhaustive_params(base: SearchParams = SearchParams()) -> SearchParams:
+    """HyperOMS baseline = same engine, no block pruning."""
+    return base._replace(exhaustive=True)
+
+
+# ---------------------------------------------------------------------------
+# Dense binned-vector scoring (ANN-SoLo / SpectraST style)
+# ---------------------------------------------------------------------------
+
+
+def bin_spectra_dense(mz, intensity, *, bin_size, mz_min, mz_max):
+    """(B, P) peaks -> (B, n_bins) sqrt-scaled L2-normalised dense vectors."""
+    n_bins = int(round((mz_max - mz_min) / bin_size))
+    valid = intensity > 0
+    bins = jnp.clip(((mz - mz_min) / bin_size).astype(jnp.int32), 0, n_bins - 1)
+    inten = jnp.sqrt(jnp.where(valid, intensity, 0.0))
+
+    def one(b, i):
+        return jnp.zeros((n_bins,), jnp.float32).at[b].add(i)
+
+    vec = jax.vmap(one)(bins, inten)
+    norm = jnp.maximum(jnp.linalg.norm(vec, axis=-1, keepdims=True), 1e-9)
+    return vec / norm
+
+
+class DenseSearchResult(NamedTuple):
+    std_idx: jax.Array
+    std_score: jax.Array
+    open_idx: jax.Array
+    open_score: jax.Array
+
+
+def _dual_window_argmax(scores, q_pmz, r_pmz, q_charge, r_charge,
+                        ppm_tol, open_tol_da):
+    dpmz = jnp.abs(q_pmz[:, None] - r_pmz[None, :])
+    chg = q_charge[:, None] == r_charge[None, :]
+    std_m = chg & (dpmz <= q_pmz[:, None] * ppm_tol * 1e-6)
+    open_m = chg & (dpmz <= open_tol_da)
+    neg = jnp.float32(-2.0)
+    s_std = jnp.where(std_m, scores, neg)
+    s_open = jnp.where(open_m, scores, neg)
+    std_idx = jnp.argmax(s_std, axis=1)
+    open_idx = jnp.argmax(s_open, axis=1)
+    std_sc = jnp.take_along_axis(s_std, std_idx[:, None], 1)[:, 0]
+    open_sc = jnp.take_along_axis(s_open, open_idx[:, None], 1)[:, 0]
+    return (jnp.where(std_sc > neg, std_idx, -1), std_sc,
+            jnp.where(open_sc > neg, open_idx, -1), open_sc)
+
+
+def spectrast_dot(q_vec, r_vec, q_pmz, r_pmz, q_charge, r_charge,
+                  *, ppm_tol=20.0, open_tol_da=75.0) -> DenseSearchResult:
+    """Plain cosine (vectors are normalised) under both windows."""
+    scores = q_vec @ r_vec.T
+    return DenseSearchResult(*_dual_window_argmax(
+        scores, q_pmz, r_pmz, q_charge, r_charge, ppm_tol, open_tol_da))
+
+
+def shifted_cosine(q_vec, r_vec, q_pmz, r_pmz, q_charge, r_charge,
+                   *, bin_size, ppm_tol=20.0, open_tol_da=75.0,
+                   shift_chunk: int = 128) -> DenseSearchResult:
+    """ANN-SoLo-style shifted dot product for the open window.
+
+    For pair (q, r) with precursor delta Δ, fragment peaks of q may match
+    reference peaks at their own bin (unmodified ions) or at bin + Δ/bin_size
+    (ions carrying the modification). Score = cos(q, r + roll(r, Δbins))
+    clipped to [0, 1] — an upper-bound variant of the tier-wise scheme that
+    preserves its key property: modified spectra score high despite the shift.
+
+    Computed per query chunk to bound the (Q, R, bins) intermediate.
+    """
+    n_bins = q_vec.shape[-1]
+
+    def per_query(qv, qp, qc):
+        delta_bins = jnp.round((qp - r_pmz) / bin_size).astype(jnp.int32)  # (R,)
+
+        def per_ref(rv, db):
+            shifted = jnp.roll(rv, db)
+            both = jnp.maximum(rv, shifted)
+            return jnp.minimum(jnp.dot(qv, both), 1.0)
+
+        open_scores = jax.vmap(per_ref)(r_vec, delta_bins)      # (R,)
+        std_scores = r_vec @ qv                                  # (R,)
+        return std_scores, open_scores
+
+    std_s, open_s = jax.lax.map(
+        lambda args: per_query(*args), (q_vec, q_pmz, q_charge))
+    std = _dual_window_argmax(std_s, q_pmz, r_pmz, q_charge, r_charge,
+                              ppm_tol, open_tol_da)[:2]
+    opn = _dual_window_argmax(open_s, q_pmz, r_pmz, q_charge, r_charge,
+                              ppm_tol, open_tol_da)[2:]
+    return DenseSearchResult(std[0], std[1], opn[0], opn[1])

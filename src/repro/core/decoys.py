@@ -1,0 +1,21 @@
+"""Decoy reference generation for target-decoy FDR (paper §II-D).
+
+Spectral-library decoys are commonly built by shuffling/perturbing real
+library spectra so they keep realistic peak statistics but match nothing.
+We implement the shuffle-and-reposition scheme: fragment peaks keep their
+intensities but are moved to random m/z bins; the precursor m/z is kept so
+decoys compete inside the same precursor windows as their targets.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_decoy_peaks(key: jax.Array, mz: jax.Array, intensity: jax.Array,
+                     mz_min: float, mz_max: float) -> tuple[jax.Array, jax.Array]:
+    """Shuffle peak positions: same intensities, random m/z. (B,P) -> (B,P)."""
+    valid = intensity > 0
+    new_mz = jax.random.uniform(key, mz.shape, minval=mz_min, maxval=mz_max,
+                                dtype=mz.dtype)
+    return jnp.where(valid, new_mz, 0.0), intensity

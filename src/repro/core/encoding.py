@@ -1,0 +1,171 @@
+"""ID–Level hyperdimensional encoding of mass spectra (paper §II-A, Fig. 3).
+
+Pipeline (faithful to the paper):
+  1. *Preprocess*: drop peaks < 1% of the base peak, bin m/z at ``bin_size``,
+     merge intensities within a bin, sqrt-scale + renormalise, quantise
+     intensity into ``n_levels`` discrete levels.
+  2. *Encode*: for each surviving peak, bind (XOR) the bin's ID hypervector
+     with the level's Level hypervector; bundle all bound peak HVs with a
+     bitwise majority; binarise. Result: one Dhv-bit HV per spectrum.
+
+Similarity between encoded spectra is Hamming distance (see packing.py).
+
+Codebooks:
+  * ID HVs: i.i.d. random binary — bins are unrelated, so their HVs are
+    ~orthogonal.
+  * Level HVs: linearly correlated chain — L[0] random, each next level flips
+    a fresh slice of a fixed random permutation so adjacent intensities stay
+    similar while L[0] ⟂ L[last] (standard ID-Level construction [VoiceHD]).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack_bits
+
+# ---------------------------------------------------------------------------
+# Codebooks
+# ---------------------------------------------------------------------------
+
+
+class Codebooks(NamedTuple):
+    """Packed codebooks + majority tie-break vector."""
+
+    id_hvs: jax.Array      # (n_bins, W) uint32 — per-m/z-bin ID hypervectors
+    level_hvs: jax.Array   # (n_levels, W) uint32 — intensity Level hypervectors
+    tiebreak: jax.Array    # (W,) uint32 — random HV deciding even-count majority ties
+    dim: int
+
+
+def make_codebooks(key: jax.Array, n_bins: int, n_levels: int, dim: int) -> Codebooks:
+    k_id, k_base, k_perm, k_tie = jax.random.split(key, 4)
+    id_bits = jax.random.bernoulli(k_id, 0.5, (n_bins, dim)).astype(jnp.uint8)
+
+    base = jax.random.bernoulli(k_base, 0.5, (dim,)).astype(jnp.uint8)
+    perm = jax.random.permutation(k_perm, dim)
+    # Level q flips the first q * dim/(2*(n_levels-1)) positions of `perm`
+    # (cumulative), so L[0] and L[n_levels-1] differ in dim/2 bits.
+    flips_per_level = dim // (2 * max(n_levels - 1, 1))
+    qs = jnp.arange(n_levels)[:, None]                        # (L, 1)
+    rank = jnp.argsort(perm)                                  # position -> rank in perm
+    flip_mask = rank[None, :] < qs * flips_per_level          # (L, D)
+    level_bits = jnp.bitwise_xor(base[None, :], flip_mask.astype(jnp.uint8))
+
+    tie_bits = jax.random.bernoulli(k_tie, 0.5, (dim,)).astype(jnp.uint8)
+    return Codebooks(
+        id_hvs=pack_bits(id_bits),
+        level_hvs=pack_bits(level_bits),
+        tiebreak=pack_bits(tie_bits),
+        dim=dim,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Preprocessing (peaks -> (bin, level, mask) triples)
+# ---------------------------------------------------------------------------
+
+
+class PreprocessedSpectra(NamedTuple):
+    bins: jax.Array    # (B, P) int32 — m/z bin index per peak (0 where masked)
+    levels: jax.Array  # (B, P) int32 — intensity level per peak
+    mask: jax.Array    # (B, P) bool — valid-peak mask
+    pmz: jax.Array     # (B,) float32 — precursor m/z
+    charge: jax.Array  # (B,) int32 — precursor charge
+
+
+def preprocess_spectra(
+    mz: jax.Array,           # (B, P) float32 — peak m/z (0 padded)
+    intensity: jax.Array,    # (B, P) float32 — peak intensity (0 padded)
+    pmz: jax.Array,          # (B,)
+    charge: jax.Array,       # (B,)
+    *,
+    bin_size: float,
+    mz_min: float,
+    mz_max: float,
+    n_levels: int,
+    min_intensity_frac: float = 0.01,
+) -> PreprocessedSpectra:
+    """Vectorised spectrum preprocessing. Padded peaks carry intensity 0."""
+    valid = (intensity > 0) & (mz >= mz_min) & (mz < mz_max)
+    inten = jnp.where(valid, intensity, 0.0)
+
+    # 1% base-peak noise filter (paper: "filtering out peaks with intensities
+    # below 1% of the highest peak").
+    base = jnp.max(inten, axis=-1, keepdims=True)
+    valid = valid & (inten >= min_intensity_frac * base)
+    inten = jnp.where(valid, inten, 0.0)
+
+    # m/z binning. NOTE: intensities of peaks landing in the same bin are
+    # combined implicitly at encode time (bound HVs of identical (bin, level)
+    # bundle like a single heavier peak); for level assignment we use the
+    # per-peak intensity, matching the HyperOMS-style vectorisation.
+    n_bins = int(round((mz_max - mz_min) / bin_size))
+    bins = jnp.clip(((mz - mz_min) / bin_size).astype(jnp.int32), 0, n_bins - 1)
+
+    # sqrt scaling + per-spectrum max-normalisation, then quantise to levels.
+    scaled = jnp.sqrt(inten)
+    smax = jnp.maximum(jnp.max(scaled, axis=-1, keepdims=True), 1e-9)
+    levels = jnp.clip(
+        (scaled / smax * (n_levels - 1) + 0.5).astype(jnp.int32), 0, n_levels - 1
+    )
+
+    return PreprocessedSpectra(
+        bins=jnp.where(valid, bins, 0),
+        levels=jnp.where(valid, levels, 0),
+        mask=valid,
+        pmz=pmz.astype(jnp.float32),
+        charge=charge.astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Encoding (bind + bundle + binarise) — pure-jnp production path.
+# The Pallas kernel (repro.kernels.hdencode) implements the same computation
+# with VMEM word-tiling; repro.kernels.hdencode.ref re-exports this oracle.
+# ---------------------------------------------------------------------------
+
+
+def _encode_counts(bins, levels, mask, cb: Codebooks) -> jax.Array:
+    """Per-bit set-count over bound peak HVs. Returns (B, D) int32 + n (B,)."""
+    from repro.core.packing import unpack_bits
+
+    id_rows = cb.id_hvs[bins]          # (B, P, W) uint32
+    lvl_rows = cb.level_hvs[levels]    # (B, P, W)
+    bound = jnp.bitwise_xor(id_rows, lvl_rows)
+    bits = unpack_bits(bound)          # (B, P, D) uint8
+    counts = jnp.sum(bits.astype(jnp.int32) * mask[..., None].astype(jnp.int32), axis=1)
+    return counts
+
+
+def encode_spectra(spectra: PreprocessedSpectra, cb: Codebooks) -> jax.Array:
+    """Encode a batch of preprocessed spectra into packed HVs (B, W) uint32.
+
+    Majority rule: bit d is 1 iff 2*count_d > n_peaks; exact ties are broken
+    by the codebook's fixed tie-break HV (deterministic, shared by queries and
+    references).
+    """
+    from repro.core.packing import unpack_bits
+
+    counts = _encode_counts(spectra.bins, spectra.levels, spectra.mask, cb)
+    n = jnp.sum(spectra.mask, axis=-1, dtype=jnp.int32)[:, None]
+    tie = unpack_bits(cb.tiebreak)[None, :].astype(jnp.int32)  # (1, D)
+    twice = 2 * counts
+    bits = jnp.where(twice == n, tie, (twice > n).astype(jnp.int32))
+    return pack_bits(bits.astype(jnp.uint8))
+
+
+def encode_spectra_batched(spectra: PreprocessedSpectra, cb: Codebooks,
+                           batch: int = 512) -> jax.Array:
+    """Memory-bounded encode for large libraries (maps encode over chunks)."""
+    B = spectra.bins.shape[0]
+    pad = (-B) % batch
+    def _pad(x):
+        return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    padded = PreprocessedSpectra(*[_pad(x) for x in spectra])
+    chunks = jax.tree_util.tree_map(
+        lambda x: x.reshape(-1, batch, *x.shape[1:]), padded)
+    enc = jax.lax.map(lambda s: encode_spectra(s, cb), chunks)
+    return enc.reshape(-1, enc.shape[-1])[:B]

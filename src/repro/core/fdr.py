@@ -1,0 +1,50 @@
+"""Target-decoy FDR filtering (paper §II-D).
+
+Standard target-decoy competition: matches are ranked by score; at any score
+cutoff, FDR ≈ (#decoy matches) / (#target matches) above the cutoff. Each
+match gets a q-value (the minimal FDR at which it is accepted, monotonised
+from the bottom of the ranking); matches with q ≤ threshold (paper: 1%) and a
+target (non-decoy) reference are reported as identifications.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FDRResult(NamedTuple):
+    accept: jax.Array    # (Q,) bool — identified at the FDR threshold
+    q_values: jax.Array  # (Q,) f32 — per-match q-value (1.0 for no-match rows)
+    n_accepted: jax.Array  # () i32
+
+
+@jax.jit
+def compute_q_values(scores: jax.Array, is_decoy: jax.Array,
+                     valid: jax.Array) -> jax.Array:
+    """q-value per match. scores: (Q,) — higher is better."""
+    Q = scores.shape[0]
+    # Invalid rows sink to the bottom of the ranking.
+    neg_inf = jnp.finfo(jnp.float32).min
+    s = jnp.where(valid, scores.astype(jnp.float32), neg_inf)
+    order = jnp.argsort(-s)  # descending
+    d = is_decoy[order].astype(jnp.float32)
+    v = valid[order].astype(jnp.float32)
+    cum_decoy = jnp.cumsum(d * v)
+    cum_target = jnp.cumsum((1.0 - d) * v)
+    # clip at 1: when decoys lead the ranking the ratio can exceed 1, but an
+    # FDR estimate is a proportion (standard q-value convention)
+    fdr = jnp.minimum(cum_decoy / jnp.maximum(cum_target, 1.0), 1.0)
+    # Monotonise: q_i = min_{j >= i} fdr_j  (suffix cummin via reversed cummin)
+    q_sorted = jnp.flip(jax.lax.cummin(jnp.flip(fdr)))
+    q = jnp.zeros((Q,), jnp.float32).at[order].set(q_sorted)
+    return jnp.where(valid, q, 1.0)
+
+
+def fdr_filter(scores: jax.Array, is_decoy: jax.Array, valid: jax.Array,
+               threshold: float = 0.01) -> FDRResult:
+    q = compute_q_values(scores, is_decoy, valid)
+    accept = valid & (~is_decoy) & (q <= threshold)
+    return FDRResult(accept=accept, q_values=q,
+                     n_accepted=jnp.sum(accept, dtype=jnp.int32))

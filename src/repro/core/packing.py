@@ -1,0 +1,91 @@
+"""Binary hypervector bit-packing and Hamming primitives.
+
+Hypervectors (HVs) are Dhv-bit binary vectors. At rest (HBM / "SSD") they are
+packed 32 bits per uint32 word — the same 32x compression the paper exploits to
+keep the reference database streaming-friendly. Three equivalent Hamming
+backends exist on top of this representation:
+
+  * packed XOR + ``lax.population_count``          (paper-faithful, VPU)
+  * unpack to ±1 int8 and MXU matmul ``(D - x·yᵀ)/2``  (beyond-paper, MXU)
+  * unpacked-bit reference                          (oracle)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def n_words(dim: int) -> int:
+    if dim % WORD_BITS != 0:
+        raise ValueError(f"Dhv must be a multiple of {WORD_BITS}, got {dim}")
+    return dim // WORD_BITS
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack (..., D) {0,1} bits into (..., D//32) uint32 words (LSB-first)."""
+    d = bits.shape[-1]
+    w = n_words(d)
+    b = bits.astype(jnp.uint32).reshape(*bits.shape[:-1], w, WORD_BITS)
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))
+    return jnp.sum(b * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, dim: int | None = None) -> jax.Array:
+    """Unpack (..., W) uint32 into (..., W*32) {0,1} uint8 bits (LSB-first)."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    out = bits.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS).astype(jnp.uint8)
+    if dim is not None:
+        out = out[..., :dim]
+    return out
+
+
+def bits_to_pm1(bits: jax.Array, dtype=jnp.int8) -> jax.Array:
+    """{0,1} bits -> {+1,-1}: bit 0 -> +1, bit 1 -> -1.
+
+    With this convention ``dot(x, y) = D - 2*hamming`` so
+    ``hamming = (D - dot) / 2`` — the MXU formulation of XOR+popcount.
+    """
+    return (1 - 2 * bits.astype(jnp.int32)).astype(dtype)
+
+
+def packed_to_pm1(words: jax.Array, dtype=jnp.int8) -> jax.Array:
+    return bits_to_pm1(unpack_bits(words), dtype=dtype)
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    """Per-word popcount, int32 result."""
+    return jax.lax.population_count(words).astype(jnp.int32)
+
+
+def hamming_packed(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Hamming distance between packed HVs; broadcasts over leading dims.
+
+    a: (..., W) uint32, b: (..., W) uint32 -> (...,) int32
+    """
+    return jnp.sum(popcount(jnp.bitwise_xor(a, b)), axis=-1)
+
+
+def hamming_matrix_packed(q: jax.Array, r: jax.Array) -> jax.Array:
+    """All-pairs Hamming: q (Q, W) × r (R, W) -> (Q, R) int32. VPU path."""
+    x = jnp.bitwise_xor(q[:, None, :], r[None, :, :])
+    return jnp.sum(popcount(x), axis=-1)
+
+
+def hamming_matrix_mxu(q: jax.Array, r: jax.Array, dim: int) -> jax.Array:
+    """All-pairs Hamming via ±1 matmul: the TPU-MXU (beyond-paper) path.
+
+    HBM traffic stays packed; the unpack happens on-chip (inside the Pallas
+    kernel in production — this is the XLA-lowered equivalent used for
+    distribution dry-runs and CPU validation).
+    """
+    qp = packed_to_pm1(q, dtype=jnp.int8)[..., :dim]
+    rp = packed_to_pm1(r, dtype=jnp.int8)[..., :dim]
+    dot = jax.lax.dot_general(
+        qp, rp,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return (dim - dot) // 2

@@ -1,0 +1,141 @@
+"""End-to-end OMS pipeline: preprocess -> encode -> block -> search -> FDR.
+
+This is the paper's Fig. 1b flow as a library object. Construction ("ingest")
+is the one-time near-storage step: encode the reference library (+ generated
+decoys), build the PMZ-sorted blocked DB. `search()` is the hot path: encode
+the query batch and run the blocked dual-window search, then FDR-filter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decoys as decoys_mod
+from repro.core import encoding
+from repro.core.blocking import ReferenceDB, build_reference_db
+from repro.core.fdr import FDRResult, fdr_filter
+from repro.core.search import SearchParams, SearchResult, oms_search, plan_search
+from repro.data.spectra import SpectraSet
+
+
+@dataclasses.dataclass(frozen=True)
+class OMSConfig:
+    """Paper settings (Tables I & II)."""
+
+    dim: int = 4096              # Dhv
+    n_levels: int = 32           # intensity quantisation levels (Q in Fig. 3)
+    bin_size: float = 0.05       # m/z bin width (Table I: 0.05 / 0.04)
+    mz_min: float = 200.0
+    mz_max: float = 2000.0
+    max_r: int = 4096            # MAX_R reference block size
+    q_block: int = 16            # Q_BLOCK
+    ppm_tol: float = 20.0        # standard search window
+    open_tol_da: float = 75.0    # open search window
+    fdr_threshold: float = 0.01
+    add_decoys: bool = True
+    backend: str = "vpu"
+    seed: int = 0
+
+    @property
+    def n_bins(self) -> int:
+        return int(round((self.mz_max - self.mz_min) / self.bin_size))
+
+    @property
+    def n_words(self) -> int:
+        return self.dim // 32
+
+
+class OMSOutput(NamedTuple):
+    result: SearchResult       # raw dual-window matches (idx into target lib)
+    open_fdr: FDRResult        # FDR filtering over the open-search matches
+    std_fdr: FDRResult         # FDR filtering over the standard-search matches
+
+
+class OMSPipeline:
+    """Stateful pipeline: holds codebooks + the blocked reference DB."""
+
+    def __init__(self, cfg: OMSConfig, refs: SpectraSet, *,
+                 encode_batch: int = 512):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        k_cb, k_dec = jax.random.split(key)
+        self.codebooks = encoding.make_codebooks(
+            k_cb, n_bins=cfg.n_bins, n_levels=cfg.n_levels, dim=cfg.dim)
+
+        # --- ingest: encode targets (+decoys), build blocked DB ------------
+        ref_sets = [refs]
+        decoy_flags = [jnp.zeros((refs.mz.shape[0],), bool)]
+        if cfg.add_decoys:
+            dmz, dint = decoys_mod.make_decoy_peaks(
+                k_dec, refs.mz, refs.intensity, cfg.mz_min, cfg.mz_max)
+            ref_sets.append(SpectraSet(dmz, dint, refs.pmz, refs.charge))
+            decoy_flags.append(jnp.ones((refs.mz.shape[0],), bool))
+
+        all_hvs, all_pmz, all_charge = [], [], []
+        for s in ref_sets:
+            pre = encoding.preprocess_spectra(
+                s.mz, s.intensity, s.pmz, s.charge,
+                bin_size=cfg.bin_size, mz_min=cfg.mz_min, mz_max=cfg.mz_max,
+                n_levels=cfg.n_levels)
+            all_hvs.append(encoding.encode_spectra_batched(
+                pre, self.codebooks, batch=encode_batch))
+            all_pmz.append(pre.pmz)
+            all_charge.append(pre.charge)
+
+        hvs = jnp.concatenate(all_hvs)
+        pmz = jnp.concatenate(all_pmz)
+        charge = jnp.concatenate(all_charge)
+        is_decoy = jnp.concatenate(decoy_flags)
+        self.n_targets = refs.mz.shape[0]
+        # orig_idx in the DB refers to this concatenated (targets ++ decoys)
+        # layout; targets keep their library index, decoys get index - too.
+        self.db: ReferenceDB = build_reference_db(
+            hvs, pmz, charge, is_decoy, max_r=cfg.max_r)
+
+    # ------------------------------------------------------------------
+    def encode_queries(self, queries: SpectraSet) -> tuple[jax.Array, jax.Array, jax.Array]:
+        pre = encoding.preprocess_spectra(
+            queries.mz, queries.intensity, queries.pmz, queries.charge,
+            bin_size=self.cfg.bin_size, mz_min=self.cfg.mz_min,
+            mz_max=self.cfg.mz_max, n_levels=self.cfg.n_levels)
+        hvs = encoding.encode_spectra_batched(pre, self.codebooks)
+        return hvs, pre.pmz, pre.charge
+
+    def search_params(self, q_pmz, q_charge, *, exhaustive=False,
+                      open_tol_da=None, backend=None) -> SearchParams:
+        tol = self.cfg.open_tol_da if open_tol_da is None else open_tol_da
+        k = plan_search(self.db, np.asarray(q_pmz), np.asarray(q_charge),
+                        open_tol_da=tol, q_block=self.cfg.q_block)
+        return SearchParams(
+            ppm_tol=self.cfg.ppm_tol, open_tol_da=tol,
+            q_block=self.cfg.q_block, k_blocks=k,
+            backend=backend or self.cfg.backend, exhaustive=exhaustive)
+
+    def search(self, queries: SpectraSet, *, exhaustive: bool = False,
+               open_tol_da: float | None = None,
+               backend: str | None = None) -> OMSOutput:
+        hvs, q_pmz, q_charge = self.encode_queries(queries)
+        params = self.search_params(q_pmz, q_charge, exhaustive=exhaustive,
+                                    open_tol_da=open_tol_da, backend=backend)
+        result = oms_search(self.db, hvs, q_pmz, q_charge, params,
+                            dim=self.cfg.dim)
+
+        def _fdr(row, sim):
+            valid = row >= 0
+            isd = self.db.is_decoy[jnp.clip(row, 0, self.db.n_rows - 1)] & valid
+            return fdr_filter(sim.astype(jnp.float32), isd, valid,
+                              threshold=self.cfg.fdr_threshold)
+
+        return OMSOutput(
+            result=result,
+            open_fdr=_fdr(result.open_row, result.open_sim),
+            std_fdr=_fdr(result.std_row, result.std_sim),
+        )
+
+    # convenience for quality benchmarks -------------------------------
+    def identifications(self, out: OMSOutput) -> int:
+        return int(out.open_fdr.n_accepted)

@@ -1,0 +1,254 @@
+"""Blocked dual-window OMS search (paper §II-B orchestrator + §II-C kernel).
+
+Semantics (paper-faithful):
+  * Queries are processed in blocks of ``q_block`` (the paper's Q_BLOCK).
+  * References stream block-by-block (MAX_R rows each); the orchestrator only
+    feeds blocks whose [min_pmz, max_pmz] intersects the query block's
+    precursor window (standard 20 ppm / open ±tol Da).
+  * Per (query, reference) pair the score is Hamming similarity
+    ``sim = Dhv - hamming`` on binary HVs; a fused ``find_max_score`` keeps
+    TWO running winners per query — one under the standard-search ppm window
+    and one under the open-search Da window — exactly the two result sets the
+    paper's kernel emits.
+
+JIT strategy: queries and references are both PMZ-sorted (per charge), so a
+query block's candidate references are a *contiguous* run of blocks. We
+``searchsorted`` the start block and scan a static cap of ``k_blocks`` blocks
+(dynamic-sliced, edge-masked). ``k_blocks`` is chosen by the host-side
+orchestrator (`plan_search`) from the DB's PMZ density — the analogue of the
+paper's DRAM-level block planning. Exhaustive mode (= the HyperOMS baseline)
+is the same loop with ``start = 0`` and ``k_blocks = n_blocks``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.blocking import PAD_PMZ, ReferenceDB
+
+# Charge multiplier for building monotonic (charge, pmz) sort keys. PMZ values
+# are clipped below this, so keys from different charges never interleave.
+# Keys stay < ~2^16 where f32 spacing (<0.004) is far finer than a block span.
+_CHARGE_KEY = 8192.0
+
+
+class SearchParams(NamedTuple):
+    ppm_tol: float = 20.0          # standard-search window, parts-per-million
+    open_tol_da: float = 75.0      # open-search window, Daltons
+    q_block: int = 16              # queries per kernel iteration (paper Q_BLOCK)
+    k_blocks: int = 8              # static cap of ref blocks scanned per q-block
+    min_sim: int = 0               # matches below this similarity report idx=-1
+    backend: str = "vpu"           # 'vpu' | 'mxu' | 'kernel_vpu' | 'kernel_mxu'
+    exhaustive: bool = False       # True = HyperOMS-style full scan (baseline)
+
+
+class SearchResult(NamedTuple):
+    """Per query: best standard-window and best open-window match."""
+
+    std_idx: jax.Array     # (Q,) i32 — original library index, -1 if none
+    std_sim: jax.Array     # (Q,) i32 — Hamming similarity (Dhv - distance)
+    open_idx: jax.Array    # (Q,) i32
+    open_sim: jax.Array    # (Q,) i32
+    std_row: jax.Array     # (Q,) i32 — row in the sorted/padded DB (for decoy lookup)
+    open_row: jax.Array    # (Q,) i32
+
+
+# ---------------------------------------------------------------------------
+# Hamming backends
+# ---------------------------------------------------------------------------
+
+
+def _hamming(q: jax.Array, r: jax.Array, dim: int, backend: str) -> jax.Array:
+    """(Qb, W) x (Rk, W) -> (Qb, Rk) int32 Hamming distance."""
+    if backend == "vpu":
+        return packing.hamming_matrix_packed(q, r)
+    if backend == "mxu":
+        return packing.hamming_matrix_mxu(q, r, dim)
+    if backend == "kernel_vpu":
+        from repro.kernels.hamming import ops as hops
+        return hops.hamming_matrix(q, r)
+    if backend == "kernel_mxu":
+        from repro.kernels.hamming_mxu import ops as mops
+        return mops.hamming_matrix(q, r, dim)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# Core blocked search
+# ---------------------------------------------------------------------------
+
+
+def _find_max_dual(sims, dpmz, q_pmz, q_charge, r_charge, r_pmz, p: SearchParams):
+    """Fused dual-window find_max_score over one (Qb, Rk) tile.
+
+    Returns per-query (std_sim, std_arg, open_sim, open_arg) with arg = column
+    in the tile or -1.
+    """
+    valid = (r_pmz[None, :] < PAD_PMZ) & (q_charge[:, None] == r_charge[None, :])
+    std_mask = valid & (dpmz <= q_pmz[:, None] * (p.ppm_tol * 1e-6))
+    open_mask = valid & (dpmz <= p.open_tol_da)
+
+    neg = jnp.int32(-1)
+    std_s = jnp.where(std_mask, sims, neg)
+    open_s = jnp.where(open_mask, sims, neg)
+    std_arg = jnp.argmax(std_s, axis=1).astype(jnp.int32)
+    open_arg = jnp.argmax(open_s, axis=1).astype(jnp.int32)
+    std_best = jnp.take_along_axis(std_s, std_arg[:, None], axis=1)[:, 0]
+    open_best = jnp.take_along_axis(open_s, open_arg[:, None], axis=1)[:, 0]
+    return std_best, std_arg, open_best, open_arg
+
+
+def _block_body(db: ReferenceDB, dim: int, p: SearchParams,
+                q_hvs, q_pmz, q_charge, start_row):
+    """Scan k_blocks*max_r contiguous reference rows for one query block."""
+    rk = (p.k_blocks if not p.exhaustive else db.n_blocks) * db.max_r
+    r_hvs = jax.lax.dynamic_slice(db.hvs, (start_row, 0), (rk, db.n_words))
+    r_pmz = jax.lax.dynamic_slice(db.pmz, (start_row,), (rk,))
+    r_charge = jax.lax.dynamic_slice(db.charge, (start_row,), (rk,))
+
+    ham = _hamming(q_hvs, r_hvs, dim, p.backend)
+    sims = dim - ham
+    dpmz = jnp.abs(q_pmz[:, None] - r_pmz[None, :])
+    std_b, std_a, open_b, open_a = _find_max_dual(
+        sims, dpmz, q_pmz, q_charge, r_charge, r_pmz, p)
+
+    std_row = jnp.where(std_b >= 0, start_row + std_a, -1)
+    open_row = jnp.where(open_b >= 0, start_row + open_a, -1)
+    return std_b, std_row, open_b, open_row
+
+
+@partial(jax.jit, static_argnames=("params", "dim"))
+def _search_sorted_padded(db: ReferenceDB, q_hvs, q_pmz, q_charge,
+                          *, params: SearchParams, dim: int):
+    """Search with queries already (charge, pmz)-sorted and padded to q_block."""
+    p = params
+    QB = p.q_block
+    nqb = q_hvs.shape[0] // QB
+
+    # Monotonic block sort keys (block_max is per-charge ascending; adding a
+    # large per-charge offset makes the concatenation globally ascending).
+    bkey = jnp.where(
+        jnp.isfinite(db.block_max),
+        jnp.clip(db.block_max, 0.0, _CHARGE_KEY - 1.0) + db.block_charge * _CHARGE_KEY,
+        db.block_charge * _CHARGE_KEY + (_CHARGE_KEY - 1.0),
+    )
+
+    def one_qblock(args):
+        qh, qp, qc = args
+        if p.exhaustive:
+            start_row = jnp.int32(0)
+        else:
+            # Lowest key any query in this block can match: pmz - open_tol.
+            lo = jnp.min(jnp.clip(qp - p.open_tol_da, 0.0, _CHARGE_KEY - 1.0)
+                         + qc * _CHARGE_KEY)
+            start_blk = jnp.searchsorted(bkey, lo)
+            # one-block guard against key rounding at block boundaries
+            start_blk = jnp.clip(start_blk - 1, 0, max(db.n_blocks - p.k_blocks, 0))
+            start_row = (start_blk * db.max_r).astype(jnp.int32)
+        return _block_body(db, dim, p, qh, qp, qc, start_row)
+
+    qs = (q_hvs.reshape(nqb, QB, -1), q_pmz.reshape(nqb, QB), q_charge.reshape(nqb, QB))
+    std_b, std_row, open_b, open_row = jax.lax.map(one_qblock, qs)
+    return (std_b.reshape(-1), std_row.reshape(-1),
+            open_b.reshape(-1), open_row.reshape(-1))
+
+
+def oms_search(db: ReferenceDB, q_hvs: jax.Array, q_pmz: jax.Array,
+               q_charge: jax.Array, params: SearchParams, *, dim: int) -> SearchResult:
+    """Full OMS search: sort queries, run the blocked scan, unsort, map rows
+    back to original library indices, apply the min-similarity threshold.
+    """
+    Q = q_hvs.shape[0]
+    QB = params.q_block
+
+    # Sort queries by (charge, pmz); pad each charge group to a q_block
+    # multiple so no query block straddles a charge boundary.
+    key = jnp.clip(q_pmz, 0.0, _CHARGE_KEY - 1.0) + q_charge * _CHARGE_KEY
+    order = jnp.argsort(key)
+    # Host-side padding plan (per sorted charge runs).
+    qc_sorted = np.asarray(jax.device_get(q_charge))[np.asarray(jax.device_get(order))]
+    boundaries = np.flatnonzero(np.diff(qc_sorted)) + 1
+    groups = np.split(np.arange(Q), boundaries)
+    sel_rows, is_real = [], []
+    for g in groups:
+        sel_rows.extend(g.tolist())
+        is_real.extend([True] * len(g))
+        padn = (-len(g)) % QB
+        sel_rows.extend([g[-1]] * padn)         # repeat the last (highest-pmz)
+        #                                         row so the padded block stays
+        #                                         in one PMZ neighbourhood
+        is_real.extend([False] * padn)
+    sel = jnp.asarray(np.array(sel_rows, dtype=np.int32).reshape(-1))
+    real = jnp.asarray(np.array(is_real, dtype=bool))
+
+    qh = q_hvs[order][sel]
+    qp = q_pmz[order][sel]
+    qc = q_charge[order][sel]
+    # Padding queries keep their charge (so the block is charge-pure) but are
+    # discarded on output.
+
+    std_b, std_row, open_b, open_row = _search_sorted_padded(
+        db, qh, qp, qc, params=params, dim=dim)
+
+    # Drop padding rows, restore original query order.
+    keep = jnp.flatnonzero(real, size=Q)
+    inv = jnp.argsort(order)
+
+    def _restore(x):
+        return x[keep][inv]
+
+    std_b, std_row = _restore(std_b), _restore(std_row)
+    open_b, open_row = _restore(open_b), _restore(open_row)
+
+    def _finalize(best, row):
+        ok = (best >= params.min_sim) & (row >= 0)
+        idx = jnp.where(ok, db.orig_idx[jnp.clip(row, 0, db.n_rows - 1)], -1)
+        ok = ok & (idx >= 0)  # padding rows carry orig_idx == -1
+        return jnp.where(ok, idx, -1), jnp.where(ok, best, -1), jnp.where(ok, row, -1)
+
+    std_idx, std_sim, std_row = _finalize(std_b, std_row)
+    open_idx, open_sim, open_row = _finalize(open_b, open_row)
+    return SearchResult(std_idx, std_sim, open_idx, open_sim, std_row, open_row)
+
+
+# ---------------------------------------------------------------------------
+# Orchestrator planning (host-side, one-time)
+# ---------------------------------------------------------------------------
+
+
+def plan_search(db: ReferenceDB, q_pmz, q_charge, *, open_tol_da: float,
+                q_block: int, safety_blocks: int = 2) -> int:
+    """Pick the static ``k_blocks`` cap: the max number of contiguous blocks
+    any q_block-sized run of (charge, pmz)-sorted queries can touch under the
+    open window, plus a guard. This is the paper's DRAM orchestrator planning
+    step — done once per (DB, query batch) on host.
+    """
+    bmin = np.asarray(db.block_min); bmax = np.asarray(db.block_max)
+    bch = np.asarray(db.block_charge)
+    qp = np.asarray(q_pmz); qc = np.asarray(q_charge)
+    order = np.lexsort((qp, qc))
+    qp, qc = qp[order], qc[order]
+    worst = 1
+    for s in range(0, len(qp), q_block):
+        grp_p, grp_c = qp[s:s + q_block], qc[s:s + q_block]
+        for c in np.unique(grp_c):
+            gsel = grp_p[grp_c == c]
+            lo, hi = gsel.min() - open_tol_da, gsel.max() + open_tol_da
+            hit = (bch == c) & (bmax >= lo) & (bmin <= hi)
+            if hit.any():
+                idx = np.flatnonzero(hit)
+                worst = max(worst, int(idx.max() - idx.min() + 1))
+    return min(worst + safety_blocks, db.n_blocks)
+
+
+def scanned_rows(db: ReferenceDB, n_queries: int, params: SearchParams) -> int:
+    """Static comparison count of a search call (for Fig. 6e-style benchmarks)."""
+    nqb = -(-n_queries // params.q_block)
+    k = db.n_blocks if params.exhaustive else params.k_blocks
+    return nqb * k * db.max_r * params.q_block

@@ -1,0 +1,145 @@
+"""Synthetic mass-spectral libraries calibrated to the paper's Table I.
+
+The real iPRG2012 / HEK293 datasets are not available offline, so we generate
+libraries with matched statistics (counts, precursor ranges, charge states,
+peak densities) and *planted ground truth*:
+
+  * references: random "peptide" fragment ladders — n_peaks peaks over
+    [mz_min, mz_max), exponential-ish intensities, precursor m/z ~ U[400,1800),
+    charge ∈ {2, 3};
+  * queries: noisy replicas of randomly chosen references — peak dropout,
+    intensity jitter, small m/z jitter; a configurable fraction is *modified*:
+    the precursor is shifted by Δ ∈ [-open_tol, +open_tol] and the suffix of
+    the fragment ladder is shifted with it (how a real PTM moves b/y ions) —
+    these are findable by OMS but invisible to standard narrow-window search;
+  * a matching decoy set (see core.decoys) for FDR calibration.
+
+Everything returns padded (B, P) arrays ready for `core.encoding`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LibraryConfig:
+    n_refs: int = 4096
+    n_queries: int = 512
+    max_peaks: int = 64
+    min_peaks: int = 24
+    mz_min: float = 200.0
+    mz_max: float = 2000.0
+    pmz_min: float = 400.0
+    pmz_max: float = 1800.0
+    charges: tuple[int, ...] = (2, 3)
+    modified_frac: float = 0.5      # fraction of queries with a PTM-style shift
+    open_tol_da: float = 75.0
+    dropout: float = 0.15           # per-peak dropout probability in queries
+    mz_jitter: float = 0.01         # Da jitter on query peaks
+    seed: int = 0
+
+
+class SpectraSet(NamedTuple):
+    mz: jax.Array          # (B, P) f32, 0 padded — fragment m/z
+    intensity: jax.Array   # (B, P) f32, 0 padded
+    pmz: jax.Array         # (B,) f32 — *neutral precursor mass* (Da); the Da/ppm
+    #                        precursor windows apply to this quantity directly
+    charge: jax.Array      # (B,) i32
+
+
+class SyntheticDataset(NamedTuple):
+    refs: SpectraSet
+    queries: SpectraSet
+    query_source: jax.Array    # (Q,) i32 — ground-truth reference index
+    query_modified: jax.Array  # (Q,) bool — True where a mass shift was planted
+    query_shift: jax.Array     # (Q,) f32 — planted precursor shift (Da)
+
+
+def _make_refs(key, cfg: LibraryConfig) -> SpectraSet:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    B, P = cfg.n_refs, cfg.max_peaks
+    n_peaks = jax.random.randint(k1, (B,), cfg.min_peaks, cfg.max_peaks + 1)
+    mask = jnp.arange(P)[None, :] < n_peaks[:, None]
+    mz = jax.random.uniform(k2, (B, P), minval=cfg.mz_min, maxval=cfg.mz_max)
+    inten = jax.random.exponential(k3, (B, P)) + 0.05
+    pmz = jax.random.uniform(k4, (B,), minval=cfg.pmz_min, maxval=cfg.pmz_max)
+    cidx = jax.random.randint(k5, (B,), 0, len(cfg.charges))
+    charge = jnp.asarray(cfg.charges, jnp.int32)[cidx]
+    return SpectraSet(
+        mz=jnp.where(mask, mz, 0.0),
+        intensity=jnp.where(mask, inten, 0.0),
+        pmz=pmz,
+        charge=charge,
+    )
+
+
+def _make_queries(key, refs: SpectraSet, cfg: LibraryConfig):
+    kq, kd, kj, ki, km, ks, kf = jax.random.split(key, 7)
+    Q, P = cfg.n_queries, cfg.max_peaks
+    src = jax.random.randint(kq, (Q,), 0, refs.mz.shape[0])
+    mz = refs.mz[src]
+    inten = refs.intensity[src]
+    valid = inten > 0
+
+    # Peak dropout + intensity jitter + m/z jitter.
+    keep = jax.random.bernoulli(kd, 1.0 - cfg.dropout, (Q, P)) & valid
+    mz = mz + jax.random.normal(kj, (Q, P)) * cfg.mz_jitter
+    inten = inten * jnp.exp(jax.random.normal(ki, (Q, P)) * 0.2)
+
+    # Plant modifications: shift the precursor by Δ and shift all fragment
+    # peaks above a random breakpoint by the same Δ (PTM on a suffix residue).
+    modified = jax.random.bernoulli(km, cfg.modified_frac, (Q,))
+    shift = jax.random.uniform(ks, (Q,), minval=-cfg.open_tol_da,
+                               maxval=cfg.open_tol_da)
+    # Keep shifts away from ~0 so "modified" really is out of the ppm window.
+    shift = jnp.where(jnp.abs(shift) < 2.0, jnp.sign(shift) * 2.0 + shift, shift)
+    shift = jnp.where(modified, shift, 0.0)
+    breakpoint_mz = jax.random.uniform(kf, (Q,), minval=cfg.mz_min,
+                                       maxval=cfg.mz_max)
+    frag_shift = jnp.where((mz > breakpoint_mz[:, None]) & modified[:, None],
+                           shift[:, None], 0.0)
+    mz = mz + frag_shift
+
+    pmz = refs.pmz[src] + shift
+
+    queries = SpectraSet(
+        mz=jnp.where(keep, jnp.clip(mz, cfg.mz_min, cfg.mz_max - 1e-3), 0.0),
+        intensity=jnp.where(keep, inten, 0.0),
+        pmz=pmz,
+        charge=refs.charge[src],
+    )
+    return queries, src, modified, shift
+
+
+def make_dataset(cfg: LibraryConfig) -> SyntheticDataset:
+    key = jax.random.PRNGKey(cfg.seed)
+    kr, kq = jax.random.split(key)
+    refs = _make_refs(kr, cfg)
+    queries, src, modified, shift = _make_queries(kq, refs, cfg)
+    return SyntheticDataset(refs=refs, queries=queries, query_source=src,
+                            query_modified=modified, query_shift=shift)
+
+
+# Paper Table I presets (scaled by `scale` so CPU benchmarks stay tractable;
+# scale=1.0 reproduces the paper's library sizes).
+def iprg2012_config(scale: float = 1.0, seed: int = 0) -> LibraryConfig:
+    return LibraryConfig(
+        n_refs=max(int(1_160_000 * scale), 1024),
+        n_queries=max(int(16_000 * scale), 128),
+        open_tol_da=75.0,
+        seed=seed,
+    )
+
+
+def hek293_config(scale: float = 1.0, seed: int = 0) -> LibraryConfig:
+    return LibraryConfig(
+        n_refs=max(int(3_000_000 * scale), 1024),
+        n_queries=max(int(47_000 * scale), 128),
+        open_tol_da=75.0,
+        seed=seed,
+    )

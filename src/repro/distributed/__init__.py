@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    opt_state_pspecs,
+    param_pspecs,
+)

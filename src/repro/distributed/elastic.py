@@ -1,0 +1,59 @@
+"""Elastic scaling: rebuild a smaller/larger mesh and reshard state.
+
+At 1000+ node scale, node loss is routine. The elastic protocol here:
+  1. a health check (simulated) reports the surviving device set;
+  2. ``remesh()`` builds the largest (data', model) mesh that fits it —
+     the model axis is preserved (TP degree is a property of the program),
+     the data axis shrinks/grows;
+  3. state is resharded by device_put onto the new NamedShardings —
+     checkpoint restore takes the same path, so recovery-from-disk and
+     live-reshard share code.
+
+Offline (1 CPU device / forced host devices) this exercises the exact same
+code path with fewer fake devices.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+
+def remesh(devices, model_axis_size: int, *, axis_names=("data", "model")):
+    """Largest (data, model) mesh from the surviving device list."""
+    n = len(devices)
+    if n < model_axis_size:
+        raise ValueError(
+            f"cannot keep TP={model_axis_size} with {n} devices")
+    data = n // model_axis_size
+    usable = devices[: data * model_axis_size]
+    arr = np.array(usable).reshape(data, model_axis_size)
+    return Mesh(arr, axis_names)
+
+
+def reshard_tree(tree, pspecs, new_mesh):
+    """Reshard a pytree onto a new mesh.
+
+    A shrunken data axis may no longer divide some dims (e.g. batch 8 over a
+    3-way survivor axis); those dims fall back to replication via the same
+    `enforce_divisibility` rule the launchers use — elastic restart never
+    fails on arithmetic, it just degrades sharding for the odd leaf.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import enforce_divisibility
+
+    fixed = enforce_divisibility(pspecs, tree, new_mesh)
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+
+    return jax.tree_util.tree_map(
+        put, tree, fixed,
+        is_leaf=lambda v: not isinstance(v, (dict, list, tuple)))
+
+
+def simulate_node_failure(mesh: Mesh, n_lost_nodes: int, devices_per_node=1):
+    """Drop the last n nodes' devices; return the survivor list."""
+    devs = list(mesh.devices.flat)
+    survivors = devs[: len(devs) - n_lost_nodes * devices_per_node]
+    return survivors

@@ -1,0 +1,243 @@
+"""Sharding rules: param/optimizer/cache/batch PartitionSpecs.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+  * pod+data — pure data parallelism (batch dim); pod crosses DCN.
+  * model    — tensor parallelism (attention heads / FFN hidden / vocab),
+               expert parallelism (MoE expert dim) and sequence-sharded KV
+               for long-context decode (split-K-style).
+
+Rules are *name-based* and aligned to the TRAILING dims of each leaf, so the
+same rule works for single layers and layer-stacked (scan) params (leading
+stack dim is always unsharded/replicated).
+
+ZeRO-1: optimizer m/v get the param spec PLUS the largest remaining
+unsharded trailing dim sharded over "data" when divisible — opt state is
+fully distributed while params stay replicated over data for fast forward.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# name -> spec for the trailing dims (len == expected trailing rank)
+_PARAM_RULES: dict[str, tuple] = {
+    # embeddings / unembedding
+    "embed": ("model", None),          # vocab-sharded
+    "unembed": (None, "model"),
+    "pos_dec": (None, None),
+    # attention
+    "wq": (None, "model", None),
+    "wk": (None, "model", None),
+    "wv": (None, "model", None),
+    "wo": ("model", None, None),
+    "bq": ("model", None),
+    "bk": ("model", None),
+    "bv": ("model", None),
+    "bo": (None,),
+    # MLA
+    "w_dkv": (None, None),             # latent is small; replicate
+    "w_uk": (None, "model", None),
+    "w_uv": (None, "model", None),
+    # dense FFN
+    "w_gate": (None, "model"),
+    "w_up": (None, "model"),
+    "w_down": ("model", None),
+    "w_in": (None, "model"),
+    "b_in": ("model",),
+    "w_out": ("model", None),
+    "b_out": (None,),
+    # MoE (expert-parallel over model). NOTE: expert tensors are 3D
+    # (E, D, F) — matched before the dense 2D names above by rank.
+    "router": (None, None),
+    # RG-LRU
+    "w_in_main": (None, "model"),
+    "w_in_gate": (None, "model"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "w_a": (None, "model"),
+    "b_a": ("model",),
+    "w_x": (None, "model"),
+    "b_x": ("model",),
+    "lam": ("model",),
+    # xLSTM
+    "w_q": (None, "model"),
+    "w_k": (None, "model"),
+    "w_v": (None, "model"),
+    "w_i": (None, None),
+    "w_f": (None, None),
+    "b_i": (None,),
+    "b_f": (None,),
+    "out_scale": ("model",),
+    "w_zifo": (None, "model"),
+    "b_zifo": ("model",),
+    "r_z": (None, None, None),
+    "r_i": (None, None, None),
+    "r_f": (None, None, None),
+    "r_o": (None, None, None),
+    "ffn_up": (None, "model"),
+    "ffn_down": ("model", None),
+    # norms
+    "scale": (None,),
+    "bias": (None,),
+}
+
+# MoE expert tensors: (E, D, F)-shaped leaves under an "ffn" subtree.
+_MOE_EXPERT_RULES = {
+    "w_gate": ("model", None, None),
+    "w_up": ("model", None, None),
+    "w_down": ("model", None, None),
+}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+    return names
+
+
+def _spec_for(path, leaf) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    rule = _PARAM_RULES.get(name)
+    if rule is None:
+        return P()
+    k = len(rule)
+    if leaf.ndim < k:
+        return P()
+    return P(*((None,) * (leaf.ndim - k) + tuple(rule)))
+
+
+def param_pspecs(params, *, moe: bool = False):
+    """Pytree of PartitionSpec matching params.
+
+    ``moe=True`` switches ffn/{w_gate,w_up,w_down} to expert-parallel rules
+    (those leaves are (L, E, D, F) instead of (L, D, F)).
+    """
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if moe and "ffn" in names and name in _MOE_EXPERT_RULES \
+                and "shared" not in names:
+            rule = _MOE_EXPERT_RULES[name]
+            return P(*((None,) * (leaf.ndim - 3) + tuple(rule)))
+        return _spec_for(path, leaf)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def opt_state_pspecs(params, pspecs, *, data_axis="data", mesh_axis_size=16,
+                     moe: bool = False):
+    """ZeRO-1: m/v = param spec + biggest unsharded trailing dim -> data."""
+
+    def zero1(p, spec):
+        parts = list(spec) + [None] * (p.ndim - len(spec))
+        best, best_size = None, 0
+        for i, (dim, sp) in enumerate(zip(p.shape, parts)):
+            if sp is None and dim % mesh_axis_size == 0 and dim > best_size:
+                best, best_size = i, dim
+        if best is not None:
+            parts[best] = data_axis
+        return P(*parts)
+
+    mv = jax.tree_util.tree_map(zero1, params, pspecs)
+    return {"m": mv, "v": mv, "step": P()}
+
+
+def batch_pspecs(batch, *, data_axes=("data",)):
+    """Shard the batch dim over (pod+)data; everything else replicated."""
+    da = tuple(data_axes)
+    spec_da = da[0] if len(da) == 1 else da
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if name == "positions3":               # (3, B, S)
+            return P(None, spec_da, None)
+        if name == "index":                    # scalar decode index
+            return P()
+        return P(*((spec_da,) + (None,) * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_pspecs(cache, *, data_axes=("data",), model_axis="model",
+                 model_size=16):
+    """KV/state caches: batch over (pod+)data; model axis goes to KV heads
+    when divisible, else to the sequence dim (split-K decode); recurrent
+    states shard their channel dim."""
+    da = tuple(data_axes)
+    spec_da = da[0] if len(da) == 1 else da
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        nd = leaf.ndim
+        if name in ("k", "v", "ck", "cv") and nd == 5:
+            # (L, B, S, KV, hd)
+            kv = leaf.shape[3]
+            if kv % model_size == 0:
+                return P(None, spec_da, None, model_axis, None)
+            return P(None, spec_da, model_axis, None, None)
+        if name == "ckv" and nd == 4:          # (L, B, S, r)
+            return P(None, spec_da, model_axis, None)
+        if name == "conv" and nd == 4:         # (L, B, K-1, C)
+            return P(None, spec_da, None, model_axis)
+        if name == "h" and nd == 3:            # (L, B, C)
+            return P(None, spec_da, model_axis)
+        if name == "C" and nd == 5:            # (L, B, NH, dk, dv)
+            return P(None, spec_da, None, None, model_axis)
+        if name in ("n",) and nd == 4:         # (L, B, NH, dk)
+            return P(None, spec_da, None, None)
+        if name == "m" and nd == 3:            # (L, B, NH)
+            return P(None, spec_da, None)
+        if nd >= 2:                            # sLSTM c/n/h/m (L, B, D)
+            return P(None, spec_da) if nd == 2 else \
+                P(*((None, spec_da) + (None,) * (nd - 2)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def named_sharding_tree(mesh, pspecs):
+    from jax.sharding import NamedSharding
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+
+
+def enforce_divisibility(pspecs, tree, mesh):
+    """Replicate any dim whose size isn't divisible by its mesh axes.
+
+    jit in_shardings demand exact divisibility. Non-divisible cases are real
+    and expected at fixed TP degree — e.g. GQA kv-heads (8) < model axis (16),
+    24-head attention on a 16-way axis, batch 1 on a 16-way data axis — and
+    the standard production answer is to replicate that dim (kv-head
+    replication) while other dims keep their sharding. The perf impact is
+    visible in the roofline and is a hillclimbing target (see EXPERIMENTS.md
+    §Perf: head padding).
+    """
+    import numpy as np
+
+    def fix(spec, leaf):
+        if spec is None or not isinstance(spec, P):
+            return spec
+        if not hasattr(leaf, "ndim"):
+            return spec
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, ax in enumerate(parts[:leaf.ndim]):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if leaf.shape[i] % size != 0:
+                parts[i] = None
+        return P(*parts[:leaf.ndim])
+
+    return jax.tree_util.tree_map(
+        fix, pspecs, tree, is_leaf=lambda x: isinstance(x, P) or x is None)

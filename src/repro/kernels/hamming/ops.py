@@ -1,0 +1,70 @@
+"""Jitted wrappers for the hamming Pallas kernels (padding + dispatch)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hamming import hamming as _k
+
+PAD_PMZ = float(jnp.finfo(jnp.float32).max)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x, mult, value=0):
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, cfg, constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("q_tile", "r_tile", "word_tile", "interpret"))
+def hamming_matrix(q, r, *, q_tile: int = 16, r_tile: int = 256,
+                   word_tile: int = 16, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    Q, R = q.shape[0], r.shape[0]
+    W = q.shape[1]
+    wt = min(word_tile, W)
+    while W % wt:
+        wt -= 1
+    qp = _pad_rows(q, q_tile)
+    rp = _pad_rows(r, r_tile)
+    out = _k.hamming_matrix_pallas(
+        qp, rp, q_tile=q_tile, r_tile=min(r_tile, rp.shape[0]),
+        word_tile=wt, interpret=interpret)
+    return out[:Q, :R]
+
+
+@partial(jax.jit, static_argnames=("dim", "ppm_tol", "open_tol_da", "q_tile",
+                                   "r_tile", "word_tile", "interpret"))
+def fused_search(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge, *, dim: int,
+                 ppm_tol: float = 20.0, open_tol_da: float = 75.0,
+                 q_tile: int = 16, r_tile: int = 256, word_tile: int = 16,
+                 interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    Q = q_hvs.shape[0]
+    W = q_hvs.shape[1]
+    wt = min(word_tile, W)
+    while W % wt:
+        wt -= 1
+    rt = min(r_tile, r_hvs.shape[0])
+
+    qh = _pad_rows(q_hvs, q_tile)
+    qp = _pad_rows(q_pmz, q_tile)
+    qc = _pad_rows(q_charge, q_tile, value=-(2 ** 30))
+    rh = _pad_rows(r_hvs, rt)
+    rp = _pad_rows(r_pmz, rt, value=PAD_PMZ)
+    rc = _pad_rows(r_charge, rt, value=-1)
+
+    std_sim, std_idx, open_sim, open_idx = _k.fused_search_pallas(
+        qh, rh, qp, rp, qc, rc, dim=dim, ppm_tol=ppm_tol,
+        open_tol_da=open_tol_da, q_tile=q_tile, r_tile=rt,
+        word_tile=wt, pad_pmz=PAD_PMZ, interpret=interpret)
+    return std_sim[:Q], std_idx[:Q], open_sim[:Q], open_idx[:Q]

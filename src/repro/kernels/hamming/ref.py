@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the hamming kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import hamming_matrix_packed
+
+
+def hamming_matrix(q, r):
+    """(Q, W) x (R, W) uint32 -> (Q, R) int32."""
+    return hamming_matrix_packed(q, r)
+
+
+def fused_search(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge, *,
+                 dim: int, ppm_tol: float = 20.0, open_tol_da: float = 75.0,
+                 pad_pmz: float | None = None):
+    """Oracle for the fused dual-window search kernel."""
+    if pad_pmz is None:
+        pad_pmz = float(jnp.finfo(jnp.float32).max)
+    sims = dim - hamming_matrix_packed(q_hvs, r_hvs)
+    dpmz = jnp.abs(q_pmz[:, None] - r_pmz[None, :])
+    valid = (r_pmz[None, :] < pad_pmz) & (q_charge[:, None] == r_charge[None, :])
+    neg = jnp.int32(-1)
+
+    def best(mask):
+        s = jnp.where(mask, sims, neg)
+        arg = jnp.argmax(s, axis=1).astype(jnp.int32)
+        b = jnp.take_along_axis(s, arg[:, None], axis=1)[:, 0]
+        return b, jnp.where(b > neg, arg, neg)
+
+    std_mask = valid & (dpmz <= q_pmz[:, None] * (ppm_tol * 1e-6))
+    open_mask = valid & (dpmz <= open_tol_da)
+    std_sim, std_idx = best(std_mask)
+    open_sim, open_idx = best(open_mask)
+    return std_sim, std_idx, open_sim, open_idx

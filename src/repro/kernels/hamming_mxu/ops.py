@@ -1,0 +1,40 @@
+"""Jitted wrapper for the MXU hamming kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hamming_mxu import hamming_mxu as _k
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("dim", "q_tile", "r_tile", "word_tile",
+                                   "interpret"))
+def hamming_matrix(q, r, dim: int, *, q_tile: int = 32, r_tile: int = 256,
+                   word_tile: int = 16, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    Q, W = q.shape
+    R = r.shape[0]
+    if dim != W * 32:
+        raise ValueError("MXU kernel requires dim == 32*W (pad HVs to words)")
+    wt = min(word_tile, W)
+    while W % wt:
+        wt -= 1
+
+    def pad(x, mult):
+        p = (-x.shape[0]) % mult
+        return jnp.pad(x, [(0, p), (0, 0)]) if p else x
+
+    qt = min(q_tile, Q) if Q >= q_tile else q_tile
+    rt = min(r_tile, R) if R >= r_tile else r_tile
+    qp, rp = pad(q, qt), pad(r, rt)
+    out = _k.hamming_matrix_mxu_pallas(
+        qp, rp, dim=dim, q_tile=qt, r_tile=rt, word_tile=wt,
+        interpret=interpret)
+    return out[:Q, :R]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the MXU hamming kernel (must equal the VPU oracle)."""
+from repro.core.packing import hamming_matrix_packed
+
+
+def hamming_matrix(q, r, dim: int):
+    # Hamming is representation-independent: the MXU kernel must reproduce
+    # the packed XOR+popcount result exactly (integer arithmetic, no tol).
+    return hamming_matrix_packed(q, r)

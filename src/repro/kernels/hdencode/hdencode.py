@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: ID-Level HD spectrum encoder (paper §II-A, Fig. 3).
+
+The paper's HLS encoder partitions the ID and Level arrays for concurrent
+access and pipelines bind (XOR) + majority over peaks. On TPU the analogous
+structure is word-tiling: the grid splits the Dhv dimension into word tiles;
+each grid cell holds the (n_bins, WT) and (n_levels, WT) codebook column
+slices in VMEM and encodes a block of spectra against them:
+
+  grid = (spectra_blocks, word_tiles)
+  per cell:  rows = ID[bins] ^ L[levels]      gather + bind, packed
+             counts = Σ_peaks unpack(rows)    bundle (masked)
+             bit    = majority(counts, tie)   binarise
+             out    = pack(bit)               (SB, WT) uint32
+
+Each word tile is independent (majority is per-bit), so there is no
+cross-cell reduction — the kernel is embarrassingly parallel like the
+paper's partitioned HLS arrays.
+
+VMEM budget note: the dominant resident is the ID codebook column slice,
+n_bins × WT × 4 B (e.g. 36k bins × 8 words × 4 B ≈ 1.2 MB) — the knob that
+keeps it in VMEM is WT, exactly like FACTOR in the paper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unpack_bits(words):
+    """(..., WT) uint32 -> (..., WT*32) int32 in {0,1}."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], words.shape[-1] * 32).astype(jnp.int32)
+
+
+def _pack_bits(bits):
+    """(..., WT*32) {0,1} int32 -> (..., WT) uint32."""
+    w = bits.shape[-1] // 32
+    b = bits.reshape(*bits.shape[:-1], w, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(b * weights, axis=-1, dtype=jnp.uint32)
+
+
+def hdencode_kernel(bins_ref, levels_ref, mask_ref, id_ref, lvl_ref, tie_ref,
+                    out_ref):
+    bins = bins_ref[...]          # (SB, P) int32
+    levels = levels_ref[...]      # (SB, P) int32
+    mask = mask_ref[...]          # (SB, P) int32 {0,1}
+    ids = id_ref[...]             # (n_bins, WT) uint32 — VMEM column slice
+    lvls = lvl_ref[...]           # (n_levels, WT)
+    tie = tie_ref[...]            # (1, WT)
+
+    id_rows = jnp.take(ids, bins, axis=0)        # (SB, P, WT) gather-in-VMEM
+    lvl_rows = jnp.take(lvls, levels, axis=0)    # (SB, P, WT)
+    bound = jnp.bitwise_xor(id_rows, lvl_rows)   # bind
+    bits = _unpack_bits(bound)                   # (SB, P, WT*32)
+    counts = jnp.sum(bits * mask[:, :, None], axis=1)   # bundle  (SB, WT*32)
+    n = jnp.sum(mask, axis=1)[:, None]                  # (SB, 1)
+
+    tie_bits = _unpack_bits(tie)[0]              # (WT*32,)
+    twice = 2 * counts
+    out_bits = jnp.where(twice == n, tie_bits[None, :], (twice > n).astype(jnp.int32))
+    out_ref[...] = _pack_bits(out_bits)
+
+
+def hdencode_pallas(bins, levels, mask, id_hvs, level_hvs, tiebreak, *,
+                    spectra_tile: int = 16, word_tile: int = 8,
+                    interpret: bool = True):
+    """bins/levels/mask: (B, P); id_hvs: (F, W); level_hvs: (L, W);
+    tiebreak: (W,) -> packed HVs (B, W) uint32.
+    B % spectra_tile == 0 and W % word_tile == 0 (ops.py pads).
+    """
+    B, P = bins.shape
+    F, W = id_hvs.shape
+    L = level_hvs.shape[0]
+    grid = (B // spectra_tile, W // word_tile)
+    return pl.pallas_call(
+        hdencode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((spectra_tile, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((spectra_tile, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((spectra_tile, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((F, word_tile), lambda i, j: (0, j)),
+            pl.BlockSpec((L, word_tile), lambda i, j: (0, j)),
+            pl.BlockSpec((1, word_tile), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((spectra_tile, word_tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, W), jnp.uint32),
+        interpret=interpret,
+    )(bins, levels, mask, id_hvs, level_hvs, tiebreak[None, :])

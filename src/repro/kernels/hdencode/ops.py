@@ -1,0 +1,39 @@
+"""Jitted wrapper for the hdencode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hdencode import hdencode as _k
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("spectra_tile", "word_tile", "interpret"))
+def hdencode(bins, levels, mask, id_hvs, level_hvs, tiebreak, *,
+             spectra_tile: int = 16, word_tile: int = 8,
+             interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    B = bins.shape[0]
+    W = id_hvs.shape[1]
+    st = min(spectra_tile, B) if B else spectra_tile
+    wt = min(word_tile, W)
+    while W % wt:
+        wt -= 1
+    padb = (-B) % st
+
+    def padrows(x, value=0):
+        return jnp.pad(x, [(0, padb), (0, 0)], constant_values=value) if padb else x
+
+    out = _k.hdencode_pallas(
+        padrows(bins.astype(jnp.int32)),
+        padrows(levels.astype(jnp.int32)),
+        padrows(mask.astype(jnp.int32)),
+        id_hvs, level_hvs, tiebreak,
+        spectra_tile=st, word_tile=wt, interpret=interpret)
+    return out[:B]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the hdencode kernel: core.encoding.encode_spectra."""
+from __future__ import annotations
+
+from repro.core.encoding import Codebooks, PreprocessedSpectra, encode_spectra
+
+
+def hdencode(bins, levels, mask, id_hvs, level_hvs, tiebreak, *, dim: int):
+    cb = Codebooks(id_hvs=id_hvs, level_hvs=level_hvs, tiebreak=tiebreak,
+                   dim=dim)
+    spectra = PreprocessedSpectra(bins=bins, levels=levels, mask=mask,
+                                  pmz=None, charge=None)
+    return encode_spectra(spectra, cb)

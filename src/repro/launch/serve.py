@@ -1,0 +1,84 @@
+"""LM serving launcher: prefill + batched decode with KV caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke \
+        [--batch 4] [--prompt-len 64] [--gen 32]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import reduced_for_smoke
+from repro.configs.registry import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import build_model
+
+
+def generate(model, params, prompt, *, gen: int, enc_seq=None):
+    """Greedy generation loop with a persistent KV cache."""
+    B, P = prompt.shape
+    max_seq = P + gen
+    kw = {"enc_seq": enc_seq} if model.cfg.family == "audio" else {}
+    cache = model.init_cache(B, max_seq, **kw)
+    batch = {"tokens": prompt}
+    if model.cfg.family == "audio":
+        batch["frame_embeds"] = jnp.zeros((B, enc_seq, model.cfg.d_model),
+                                          jnp.dtype(model.cfg.dtype))
+    if model.cfg.family == "vlm":
+        nv = min(4, P)
+        batch["vision_embeds"] = jnp.zeros((B, nv, model.cfg.d_model),
+                                           jnp.dtype(model.cfg.dtype))
+        batch["positions3"] = jnp.broadcast_to(
+            jnp.arange(P)[None, None, :], (3, B, P)).astype(jnp.int32)
+
+    logits, cache = jax.jit(model.prefill)(params, batch, cache)
+    token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out = [token]
+
+    decode = jax.jit(model.decode_step, donate_argnums=1)
+    for i in range(gen - 1):
+        db = {"token": token, "index": jnp.int32(P + i)}
+        if model.cfg.family == "vlm":
+            db["positions3"] = jnp.full((3, B, 1), P + i, jnp.int32)
+        logits, cache = decode(params, cache, db)
+        token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out.append(token)
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced_for_smoke(cfg).scaled(dtype="float32")
+    model = build_model(cfg, max_seq=args.prompt_len + args.gen,
+                        chunk=min(512, args.prompt_len))
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    mesh = make_local_mesh()
+    with mesh:
+        t0 = time.perf_counter()
+        tokens = generate(model, params, prompt, gen=args.gen,
+                          enc_seq=args.prompt_len)
+        tokens.block_until_ready()
+        dt = time.perf_counter() - t0
+    n = args.batch * args.gen
+    print(f"[serve] generated {n} tokens in {dt:.2f}s "
+          f"({n / dt:.1f} tok/s); sample: {np.asarray(tokens[0, :16])}")
+
+
+if __name__ == "__main__":
+    main()

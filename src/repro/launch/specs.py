@@ -1,0 +1,185 @@
+"""Input specs (ShapeDtypeStruct stand-ins) + sharding trees per cell.
+
+``input_specs(arch, shape)`` builds every input a step function takes —
+params, optimizer state, batch, KV/state caches — as ShapeDtypeStructs
+(weak-type-correct, shardable, zero allocation), plus the matching
+PartitionSpec trees for in_shardings. This is what both the dry-run and the
+real launchers consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES, ShapeConfig, applicable
+from repro.distributed import sharding as shard_rules
+from repro.models.model import Model, build_model
+from repro.optim.adamw import adamw_init
+from repro.train.step import TrainState
+from repro.utils.treeutil import tree_bytes
+from jax.sharding import PartitionSpec as P
+
+N_VISION_TOKENS = 256       # VLM stub: image patches at the sequence head
+
+
+@dataclasses.dataclass
+class CellSpecs:
+    model: Model
+    kind: str                     # train | prefill | decode
+    args: tuple                   # ShapeDtypeStruct pytrees, step-fn args
+    in_specs: tuple               # PartitionSpec pytrees (same structure)
+    donate: tuple                 # donated argnums
+    arg_bytes: int                # global bytes of all args
+    n_params: float
+    n_params_active: float
+    tokens_per_step: float
+
+
+def _sds(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        b = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }
+        if cfg.family == "audio":
+            b["frame_embeds"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm":
+            b["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, N_VISION_TOKENS, cfg.d_model), jnp.dtype(cfg.dtype))
+            b["positions3"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+        return b
+    if shape.kind == "prefill":
+        b = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.family == "audio":
+            b["frame_embeds"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm":
+            b["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, N_VISION_TOKENS, cfg.d_model), jnp.dtype(cfg.dtype))
+            b["positions3"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+        return b
+    # decode
+    b = {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        b["positions3"] = jax.ShapeDtypeStruct((3, B, 1), jnp.int32)
+    return b
+
+
+def count_params(cfg: ArchConfig, param_specs_tree) -> tuple[float, float]:
+    """(total, active) parameter counts from the spec tree."""
+    total = expert = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(param_specs_tree)
+    for path, leaf in flat:
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        n = float(np.prod(leaf.shape))
+        total += n
+        if cfg.moe is not None and "ffn" in names and "shared" not in names \
+                and leaf.ndim >= 4:
+            expert += n
+    active = total
+    if cfg.moe is not None and expert:
+        active = total - expert + expert * (cfg.moe.top_k / cfg.moe.n_experts)
+    return total, active
+
+
+def make_cell(arch: str, shape_name: str, *, mesh, n_microbatches: int = 4,
+              remat: bool = True, chunk: int = 1024) -> CellSpecs:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell {arch} x {shape_name} skipped: {reason}")
+
+    da = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    model_size = mesh.shape["model"]
+    data_size = int(np.prod([mesh.shape[a] for a in da]))
+
+    is_train = shape.kind == "train"
+    model = build_model(cfg, max_seq=shape.seq_len,
+                        chunk=chunk, remat=remat and is_train)
+
+    param_sds = model.param_specs()
+    p_specs = shard_rules.param_pspecs(param_sds, moe=cfg.moe is not None)
+    p_specs = shard_rules.enforce_divisibility(p_specs, param_sds, mesh)
+    n_total, n_active = count_params(cfg, param_sds)
+
+    if is_train:
+        opt_sds = jax.eval_shape(adamw_init, param_sds)
+        state_sds = TrainState(params=param_sds, opt=opt_sds,
+                               step=jax.ShapeDtypeStruct((), jnp.int32),
+                               grad_err=None)
+        opt_specs = shard_rules.opt_state_pspecs(
+            param_sds, p_specs, data_axis=da[-1], mesh_axis_size=mesh.shape[da[-1]])
+        opt_specs = shard_rules.enforce_divisibility(opt_specs, opt_sds, mesh)
+        state_specs = TrainState(params=p_specs, opt=opt_specs, step=P(),
+                                 grad_err=None)
+        b_sds = batch_specs(cfg, shape)
+        b_specs = shard_rules.batch_pspecs(b_sds, data_axes=da)
+        b_specs = shard_rules.enforce_divisibility(b_specs, b_sds, mesh)
+        args = (state_sds, b_sds)
+        in_specs = (state_specs, b_specs)
+        donate = (0,)
+        tokens = shape.global_batch * shape.seq_len
+    else:
+        cache_kw = {}
+        if cfg.family == "audio":
+            cache_kw["enc_seq"] = shape.seq_len
+        cache_sds = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     **cache_kw))
+        c_specs = shard_rules.cache_pspecs(cache_sds, data_axes=da,
+                                           model_size=model_size)
+        c_specs = shard_rules.enforce_divisibility(c_specs, cache_sds, mesh)
+        b_sds = batch_specs(cfg, shape)
+        b_specs = shard_rules.batch_pspecs(b_sds, data_axes=da)
+        b_specs = shard_rules.enforce_divisibility(b_specs, b_sds, mesh)
+        if shape.kind == "prefill":
+            args = (param_sds, b_sds, cache_sds)
+            in_specs = (p_specs, b_specs, c_specs)
+            donate = (2,)
+            tokens = shape.global_batch * shape.seq_len
+        else:
+            args = (param_sds, cache_sds, b_sds)
+            in_specs = (p_specs, c_specs, b_specs)
+            donate = (1,)
+            tokens = shape.global_batch  # one token per sequence
+
+    return CellSpecs(
+        model=model, kind=shape.kind, args=args, in_specs=in_specs,
+        donate=donate, arg_bytes=tree_bytes(args),
+        n_params=n_total, n_params_active=n_active, tokens_per_step=tokens)
+
+
+def make_step_fn(cell: CellSpecs, *, n_microbatches: int = 4):
+    """The function that gets jitted/lowered for this cell."""
+    model = cell.model
+    if cell.kind == "train":
+        from repro.optim.adamw import AdamWConfig
+        from repro.train.step import make_train_step
+        return make_train_step(model, AdamWConfig(),
+                               n_microbatches=n_microbatches)
+    if cell.kind == "prefill":
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+        return prefill_step
+
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+    return serve_step

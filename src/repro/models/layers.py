@@ -1,0 +1,398 @@
+"""Shared neural layers: norms, RoPE/M-RoPE, GQA/MLA attention, FFNs.
+
+Functional style: each layer is an ``init(key, ...) -> params`` plus an
+``apply(params, ...)``; params are plain dicts so they stack cleanly for
+scan-over-layers and map 1:1 onto sharding rules (distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import unrollctl as U
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(d: int, kind: str, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        rms = jnp.sqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+        out = xf / rms * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        out = (xf - mu) / jnp.sqrt(var + eps) * p["scale"].astype(jnp.float32)
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, head_dim)."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, half)
+    ang = jnp.concatenate([ang, ang], axis=-1)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _mrope_angles(positions3, sections, head_dim: int, theta: float):
+    """positions3 (3, B, S), sections sum == head_dim//2 -> cos/sin (B,S,hd).
+
+    Qwen2-VL M-RoPE: the first `sections[0]` rotary frequencies take their
+    position from the temporal stream, the next from height, the last from
+    width. Text tokens carry identical (t,h,w) positions, reducing to RoPE.
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    sec_id = jnp.asarray(
+        np.repeat(np.arange(len(sections)), np.asarray(sections)), jnp.int32)
+    # pos_f (B, S, half): per-frequency position stream
+    pos_f = jnp.take(positions3, sec_id, axis=0)           # (half, B, S)
+    pos_f = jnp.moveaxis(pos_f, 0, -1).astype(jnp.float32)  # (B, S, half)
+    ang = pos_f * inv_freq
+    ang = jnp.concatenate([ang, ang], axis=-1)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate_half(x):
+    h = x.shape[-1] // 2
+    return jnp.concatenate([-x[..., h:], x[..., :h]], axis=-1)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, S, H, hd); cos/sin (B, S, hd) or (S, hd)."""
+    while cos.ndim < x.ndim:
+        cos = cos[..., None, :] if cos.ndim == x.ndim - 1 else cos[None]
+        sin = sin[..., None, :] if sin.ndim == x.ndim - 1 else sin[None]
+    xf = x.astype(jnp.float32)
+    out = xf * cos + _rotate_half(xf) * sin
+    return out.astype(x.dtype)
+
+
+def rope_cos_sin(cfg, positions, *, positions3=None):
+    hd = cfg.resolved_head_dim if hasattr(cfg, "resolved_head_dim") else cfg.head_dim
+    if getattr(cfg, "mla", None) is not None:
+        hd = cfg.mla.qk_rope_head_dim
+    if getattr(cfg, "mrope_sections", ()) and positions3 is not None:
+        return _mrope_angles(positions3, cfg.mrope_sections, hd, cfg.rope_theta)
+    return _rope_angles(positions, hd, cfg.rope_theta)
+
+
+def sinusoidal_positions(max_len: int, d: int):
+    """Whisper-style fixed sinusoidal embeddings (max_len, d)."""
+    pos = np.arange(max_len)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, chunked-causal, optional sliding window, KV cache decode)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    n_real_heads: int = 0    # 0 = all heads real; else the tail heads are
+    #                          TP padding with zeroed output rows (§Perf)
+
+
+def real_head_positions(d: AttnDims):
+    """Indices of the real heads inside the padded head layout, or None.
+
+    GQA maps q-head h to kv-head h // (H/KV), so padding must be appended
+    *within each kv group* (not at the tail) to preserve the real heads'
+    kv assignment. Real head r of group g sits at g*(Hp/KV) + (r mod H/KV).
+    """
+    nr = d.n_real_heads or d.n_heads
+    if nr == d.n_heads:
+        return None
+    kv = d.n_kv_heads
+    rpg, ppg = nr // kv, d.n_heads // kv
+    return np.concatenate([g * ppg + np.arange(rpg) for g in range(kv)])
+
+
+def attn_init(key, d: AttnDims, dtype, *, bias: bool = False):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    wo = dense_init(k4, (d.n_heads, d.head_dim, d.d_model), dtype)
+    pos = real_head_positions(d)
+    if pos is not None:
+        # zero the padded heads' output rows: their (garbage) attention
+        # output contributes exactly nothing, and stays zero under training
+        # (gradients through a zero row are zero; weight decay keeps it 0).
+        mask = np.zeros((d.n_heads, 1, 1), dtype=bool)
+        mask[pos] = True
+        wo = jnp.where(jnp.asarray(mask), wo, 0)
+    p = {
+        "wq": dense_init(k1, (d.d_model, d.n_heads, d.head_dim), dtype),
+        "wk": dense_init(k2, (d.d_model, d.n_kv_heads, d.head_dim), dtype),
+        "wv": dense_init(k3, (d.d_model, d.n_kv_heads, d.head_dim), dtype),
+        "wo": wo,
+    }
+    if bias:
+        p["bq"] = jnp.zeros((d.n_heads, d.head_dim), dtype)
+        p["bk"] = jnp.zeros((d.n_kv_heads, d.head_dim), dtype)
+        p["bv"] = jnp.zeros((d.n_kv_heads, d.head_dim), dtype)
+        p["bo"] = jnp.zeros((d.d_model,), dtype)
+    return p
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    B, S, KV, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, n_rep, hd)
+                            ).reshape(B, S, KV * n_rep, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      window: int = 0, chunk: int = 1024,
+                      kv_valid_len=None):
+    """Memory-efficient attention: q chunked, full K/V per chunk.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd). ``q_offset`` is the absolute
+    position of q[0] (for decode/cache alignment). ``window`` > 0 enables a
+    sliding-window (local) causal mask. ``kv_valid_len`` masks cache tails.
+    Never materialises more than (B, H, chunk, Skv) scores — the softmax is
+    exact (per-chunk rows are complete), so no online rescaling is needed.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, H // KV)
+    v = _repeat_kv(v, H // KV)
+    scale = 1.0 / np.sqrt(hd)
+
+    chunk = min(chunk, Sq)
+    pad = (-Sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = q.shape[1] // chunk
+    qr = q.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 3, 2, 4)
+
+    kT = k.transpose(0, 2, 3, 1)  # (B, H, hd, Skv)
+    vT = v.transpose(0, 2, 1, 3)  # (B, H, Skv, hd)
+    kv_pos = jnp.arange(Skv)
+
+    def one_chunk(c, qc):
+        # qc: (B, H, chunk, hd)
+        s = jnp.einsum("bhqd,bhdk->bhqk", qc.astype(jnp.float32),
+                       kT.astype(jnp.float32)) * scale
+        q_pos = q_offset + c * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, Skv), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        if kv_valid_len is not None:
+            mask &= kv_pos[None, :] < kv_valid_len
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vT.astype(jnp.float32))
+
+    out = U.chunk_map(lambda args: one_chunk(*args),
+                      (jnp.arange(n_chunks), qr))       # (n, B, H, chunk, hd_v)
+    hd_v = v.shape[-1]
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, n_chunks * chunk, H, hd_v)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attn_apply(p, x, cos_sin, *, dims: AttnDims, causal=True, window=0,
+               cache=None, cache_index=None, chunk=1024, use_rope=True):
+    """Returns (out, new_cache). cache = {'k','v'} (B, Smax, KV, hd).
+
+    Prefill: cache=None or empty cache to fill. Decode: x is (B, 1, D) and
+    cache_index is the write position (int32 scalar).
+    """
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]; k = k + p["bk"]; v = v + p["bv"]
+    if use_rope and cos_sin is not None:
+        cos, sin = cos_sin
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = cache
+    if cache is not None and cache_index is not None:
+        # decode: append k/v at cache_index (ring for windowed layers)
+        Smax = cache["k"].shape[1]
+        widx = cache_index % Smax if window else cache_index
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, widx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, widx, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        valid = jnp.minimum(cache_index + 1, Smax) if window else cache_index + 1
+        # positions for masking: ring buffers store absolute pos implicitly;
+        # with window ring we mask by validity only (all entries in-window).
+        out = chunked_attention(
+            q, ck, cv, causal=False, q_offset=0, window=0,
+            chunk=1, kv_valid_len=valid)
+    else:
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                chunk=chunk)
+        if cache is not None:  # prefill into cache
+            Smax = cache["k"].shape[1]
+            if window and Smax < k.shape[1]:
+                ks = k[:, -Smax:]; vs = v[:, -Smax:]
+            else:
+                ks, vs = k, v
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+
+    o = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    if "bo" in p:
+        o = o + p["bo"]
+    return o, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], (D, H, qk_dim), dtype),
+        "w_dkv": dense_init(ks[1], (D, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "w_uk": dense_init(ks[2], (m.kv_lora_rank, H, m.qk_nope_head_dim), dtype),
+        "w_uv": dense_init(ks[3], (m.kv_lora_rank, H, m.v_head_dim), dtype),
+        "wo": dense_init(ks[4], (H, m.v_head_dim, cfg.d_model), dtype),
+    }
+
+
+def mla_apply(p, x, cos_sin, *, cfg, cache=None, cache_index=None, chunk=1024):
+    """MLA with latent KV cache: cache = {'ckv': (B, Smax, r + rope_dim)}.
+
+    The latent c_kv (+ shared rope key) is what gets cached — the paper-
+    relevant serving win (cache bytes/token = r + rope_dim ≪ 2·H·hd).
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    r = m.kv_lora_rank
+    cos, sin = cos_sin
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])   # (B, S, r+rope)
+    k_rope_new = apply_rope(ckv_full[..., None, r:], cos, sin)  # (B,S,1,rope)
+    ckv_new = jnp.concatenate([ckv_full[..., :r],
+                               k_rope_new[..., 0, :]], axis=-1)
+
+    new_cache = cache
+    if cache is not None and cache_index is not None:
+        ck = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv_new.astype(cache["ckv"].dtype),
+            (0, cache_index, 0))
+        new_cache = {"ckv": ck}
+        ckv_att, kv_valid = ck, cache_index + 1
+    else:
+        if cache is not None:
+            ck = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, 0, 0))
+            new_cache = {"ckv": ck}
+        ckv_att, kv_valid = ckv_new, None
+
+    # up-project latent to per-head K (nope part) and V
+    c = ckv_att[..., :r]
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c, p["w_uv"])
+    k_rope = jnp.broadcast_to(ckv_att[..., None, r:],
+                              (*ckv_att.shape[:2], H, m.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+
+    decode = cache_index is not None and cache is not None
+    out = chunked_attention(
+        q, k, v, causal=not decode, chunk=(1 if decode else chunk),
+        kv_valid_len=kv_valid)
+    o = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    return o, new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+
+
+def ffn_init(key, d_model: int, d_ff: int, kind: str, dtype):
+    if kind == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+            "w_up": dense_init(k2, (d_model, d_ff), dtype),
+            "w_down": dense_init(k3, (d_ff, d_model), dtype),
+        }
+    if kind == "mlp_gelu":
+        k1, k2 = jax.random.split(key, 2)
+        return {
+            "w_in": dense_init(k1, (d_model, d_ff), dtype),
+            "b_in": jnp.zeros((d_ff,), dtype),
+            "w_out": dense_init(k2, (d_ff, d_model), dtype),
+            "b_out": jnp.zeros((d_model,), dtype),
+        }
+    raise ValueError(kind)
+
+
+def ffn_apply(p, x, kind: str):
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"])
+    if kind == "mlp_gelu":
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_in"]) + p["b_in"])
+        return jnp.einsum("bsf,fd->bsd", h, p["w_out"]) + p["b_out"]
+    raise ValueError(kind)

@@ -1,0 +1,108 @@
+"""Unified model facade: one object per architecture with
+init / loss / prefill / decode entry points, used by train, serve and dryrun.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    max_seq: int = 4096           # KV/positions capacity for serving caches
+    chunk: int = 1024             # attention q-chunk
+    remat: bool = False
+
+    # ---------------- params ----------------
+    def init_params(self, key) -> Any:
+        if self.cfg.family == "audio":
+            return W.init_params(key, self.cfg, max_dec_seq=self.max_seq)
+        return T.init_params(key, self.cfg)
+
+    def param_specs(self):
+        return jax.eval_shape(lambda k: self.init_params(k),
+                              jax.random.PRNGKey(0))
+
+    # ---------------- training ----------------
+    def loss_fn(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            enc = W.encode(params, cfg, batch["frame_embeds"],
+                           chunk=self.chunk, remat=self.remat)
+            hidden, _ = W.decode(params, cfg, batch["tokens"], enc_out=enc,
+                                 chunk=self.chunk, remat=self.remat)
+            logits_loss = _ce_loss_whisper(params, hidden, batch)
+            return logits_loss
+        kw = {}
+        if cfg.family == "vlm":
+            kw = dict(vision_embeds=batch["vision_embeds"],
+                      positions3=batch["positions3"])
+        hidden, _, aux = T.forward(params, cfg, batch["tokens"],
+                                   chunk=self.chunk, remat=self.remat, **kw)
+        loss = T.lm_loss(params, cfg, hidden, batch["targets"], batch["mask"])
+        return loss + aux
+
+    # ---------------- serving ----------------
+    def init_cache(self, batch_size: int, max_seq: int | None = None,
+                   enc_seq: int | None = None):
+        S = max_seq or self.max_seq
+        if self.cfg.family == "audio":
+            return W.init_cache(self.cfg, batch_size, S, enc_seq or S)
+        return T.init_cache(self.cfg, batch_size, S)
+
+    def prefill(self, params, batch, cache):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            enc = W.encode(params, cfg, batch["frame_embeds"],
+                           chunk=self.chunk)
+            hidden, cache = W.decode(params, cfg, batch["tokens"],
+                                     enc_out=enc, cache=cache,
+                                     chunk=self.chunk)
+            logits = W.lm_head(params, hidden[:, -1:])
+            return logits, cache
+        kw = {}
+        if cfg.family == "vlm":
+            kw = dict(vision_embeds=batch["vision_embeds"],
+                      positions3=batch["positions3"])
+        hidden, cache, _ = T.forward(params, cfg, batch["tokens"],
+                                     cache=cache, chunk=self.chunk, **kw)
+        logits = T.lm_head(params, cfg, hidden[:, -1:])
+        return logits, cache
+
+    def decode_step(self, params, cache, batch):
+        """batch: {"token": (B,1), "index": () i32, ["positions3"]}."""
+        cfg = self.cfg
+        idx = batch["index"]
+        if cfg.family == "audio":
+            hidden, cache = W.decode(params, cfg, batch["token"], cache=cache,
+                                     cache_index=idx, chunk=self.chunk)
+            return W.lm_head(params, hidden), cache
+        kw = {}
+        if cfg.family == "vlm":
+            kw = dict(positions3=batch.get("positions3"))
+        hidden, cache, _ = T.forward(params, cfg, batch["token"], cache=cache,
+                                     cache_index=idx, decode=True,
+                                     chunk=self.chunk, **kw)
+        return T.lm_head(params, cfg, hidden), cache
+
+
+def _ce_loss_whisper(params, hidden, batch):
+    import jax.numpy as jnp
+    logits = W.lm_head(params, hidden).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["targets"][..., None],
+                               axis=-1)[..., 0]
+    m = batch["mask"].astype(jnp.float32)
+    return jnp.sum((logz - gold) * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def build_model(cfg: ArchConfig, **kw) -> Model:
+    return Model(cfg=cfg, **kw)

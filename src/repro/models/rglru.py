@@ -1,0 +1,113 @@
+"""Griffin / RecurrentGemma recurrent block: RG-LRU + temporal conv + gating.
+
+RG-LRU recurrence (per channel, [arXiv:2402.19427] eq. 3-6):
+    r_t = sigmoid(W_a x_t + b_a)              recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)              input gate
+    a_t = exp(-c * softplus(Λ) * r_t)         with c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the diagonal linear
+recurrence (O(log S) depth — the TPU-friendly formulation). Decode carries
+``h`` as O(1) state, which is why long_500k runs for this arch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+_C = 8.0
+
+
+def rglru_init(key, d_model: int, width: int, conv_width: int, dtype):
+    ks = jax.random.split(key, 7)
+    return {
+        # gated-MLP style branch projections (Griffin recurrent block)
+        "w_in_main": dense_init(ks[0], (d_model, width), dtype),
+        "w_in_gate": dense_init(ks[1], (d_model, width), dtype),
+        "w_out": dense_init(ks[2], (width, d_model), dtype),
+        "conv_w": dense_init(ks[3], (conv_width, width), dtype, scale=0.5),
+        "conv_b": jnp.zeros((width,), dtype),
+        # RG-LRU gates
+        "w_a": dense_init(ks[4], (width, width), dtype),
+        "b_a": jnp.zeros((width,), jnp.float32),
+        "w_x": dense_init(ks[5], (width, width), dtype),
+        "b_x": jnp.zeros((width,), jnp.float32),
+        "lam": jax.random.uniform(ks[6], (width,), jnp.float32,
+                                  minval=0.9, maxval=0.999),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x (B,S,C), w (K,C). state: (B,K-1,C) history.
+
+    Returns (out, new_state). new_state is the last K-1 inputs."""
+    K = w.shape[0]
+    if state is None:
+        hist = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        hist = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(hist[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = hist[:, -(K - 1):] if K > 1 else None
+    return out.astype(x.dtype), new_state
+
+
+def _rglru_gates(p, x):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,S,C) <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12)) * (i * xf)
+    return a, gated_x
+
+
+def rglru_scan(p, x, h0=None):
+    """Full-sequence RG-LRU via associative scan. x (B,S,C) -> (y, h_last)."""
+    a, bx = _rglru_gates(p, x)
+    if h0 is not None:
+        # fold initial state into the first step: b_0' = a_0 h_0 + b_0
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rglru_step(p, x, h):
+    """Single decode step. x (B,1,C), h (B,C) -> (y (B,1,C), h')."""
+    a, bx = _rglru_gates(p, x)
+    h_new = a[:, 0] * h.astype(jnp.float32) + bx[:, 0]
+    return h_new[:, None].astype(x.dtype), h_new
+
+
+def rec_block_apply(p, x, *, cache=None, decode=False):
+    """The full Griffin recurrent block (replaces attention).
+
+    cache = {"h": (B, C) f32, "conv": (B, K-1, C)} for decode.
+    Returns (out, new_cache).
+    """
+    main = jnp.einsum("bsd,dc->bsc", x, p["w_in_main"])
+    gate = jnp.einsum("bsd,dc->bsc", x, p["w_in_gate"])
+
+    conv_state = cache["conv"] if (decode and cache is not None) else None
+    conv_out, new_conv = _causal_conv(main, p["conv_w"], p["conv_b"],
+                                      state=conv_state)
+    if decode and cache is not None:
+        y, h_new = rglru_step(p, conv_out, cache["h"])
+        new_cache = {"h": h_new, "conv": new_conv.astype(cache["conv"].dtype)}
+    else:
+        h0 = cache["h"] if cache is not None else None
+        y, h_last = rglru_scan(p, conv_out, h0=h0)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"h": h_last,
+                         "conv": new_conv[:, -cache["conv"].shape[1]:].astype(
+                             cache["conv"].dtype)}
+    out = y * jax.nn.gelu(gate)
+    return jnp.einsum("bsc,cd->bsd", out, p["w_out"]), new_cache

@@ -1,0 +1,376 @@
+"""Decoder-only assembly for dense / MoE / MLA / hybrid / SSM / VLM families.
+
+Layers are stored *stacked per block-type* and executed with
+``jax.lax.scan`` over homogeneous runs (MaxText-style), so compile time is
+~independent of depth. Heterogeneous patterns (Griffin's rec-rec-attn,
+xLSTM's 7 mLSTM + 1 sLSTM) scan over "superblocks" with the pattern
+unrolled inside the scan body; pattern remainders (e.g. Griffin's final
+rec-rec) run as a small tail scan.
+
+Caches mirror the per-type stacking: cache["attn"]["k"] has shape
+(n_attn_layers, B, S_max, KV, hd), etc.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.utils import unrollctl as U
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg
+from repro.models import xlstm as xl
+
+# ---------------------------------------------------------------------------
+# layout helpers
+# ---------------------------------------------------------------------------
+
+
+def block_layout(cfg: ArchConfig) -> list[str]:
+    """Per-layer block type, length n_layers."""
+    if not cfg.block_pattern:
+        base = "mla_block" if cfg.mla else "attn_block"
+        return [base] * cfg.n_layers
+    pat = list(cfg.block_pattern)
+    return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+
+def type_counts(cfg: ArchConfig) -> dict[str, int]:
+    lay = block_layout(cfg)
+    return {t: lay.count(t) for t in dict.fromkeys(lay)}
+
+
+# ---------------------------------------------------------------------------
+# per-block param init
+# ---------------------------------------------------------------------------
+
+
+def _attn_dims(cfg: ArchConfig) -> L.AttnDims:
+    h = cfg.n_heads
+    m = getattr(cfg, "tp_pad_heads_to", 0)
+    if m and h % m:
+        h = -(-h // m) * m      # pad: extra heads have zeroed output rows
+    return L.AttnDims(cfg.d_model, h, cfg.n_kv_heads,
+                      cfg.resolved_head_dim, n_real_heads=cfg.n_heads)
+
+
+def init_block(key, cfg: ArchConfig, btype: str, dtype):
+    D = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": L.norm_init(D, cfg.norm, dtype)}
+    if btype == "attn_block":
+        p["attn"] = L.attn_init(k1, _attn_dims(cfg), dtype)
+    elif btype == "mla_block":
+        p["attn"] = L.mla_init(k1, cfg, dtype)
+    elif btype == "rec":
+        p["rec"] = rg.rglru_init(k1, D, cfg.lru_width or D, cfg.conv_width, dtype)
+    elif btype == "attn":  # hybrid local-attention block
+        p["attn"] = L.attn_init(k1, _attn_dims(cfg), dtype)
+    elif btype == "mlstm":
+        return {"ln1": L.norm_init(D, cfg.norm, dtype),
+                "cell": xl.mlstm_init(k1, D, cfg.n_heads, cfg.conv_width, dtype)}
+    elif btype == "slstm":
+        return {"ln1": L.norm_init(D, cfg.norm, dtype),
+                "cell": xl.slstm_init(k1, D, cfg.n_heads, dtype)}
+    else:
+        raise ValueError(btype)
+
+    if cfg.ffn != "none":
+        p["ln2"] = L.norm_init(D, cfg.norm, dtype)
+        if cfg.moe is not None:
+            p["ffn"] = moe_mod.moe_init(k2, cfg, dtype)
+        else:
+            p["ffn"] = L.ffn_init(k2, D, cfg.d_ff, cfg.ffn, dtype)
+    return p
+
+
+def _stack_init(key, cfg, btype, count, dtype):
+    keys = jax.random.split(key, max(count, 1))[:count]
+    return jax.vmap(lambda k: init_block(k, cfg, btype, dtype))(keys)
+
+
+def init_params(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    kE, kU, kB, kN = jax.random.split(key, 4)
+    params = {
+        "embed": L.embed_init(kE, (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(
+            kU, (cfg.d_model, cfg.vocab_size), dtype)
+    for i, (btype, count) in enumerate(type_counts(cfg).items()):
+        params[btype] = _stack_init(jax.random.fold_in(kB, i), cfg, btype,
+                                    count, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None):
+    """Per-type stacked decode caches."""
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    counts = type_counts(cfg)
+    hd = cfg.resolved_head_dim
+    cache = {}
+    for btype, n in counts.items():
+        if btype in ("attn_block", "attn"):
+            S = min(max_seq, cfg.local_window) if (
+                btype == "attn" and cfg.local_window) else max_seq
+            cache[btype] = {
+                "k": jnp.zeros((n, batch, S, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((n, batch, S, cfg.n_kv_heads, hd), dtype),
+            }
+        elif btype == "mla_block":
+            m = cfg.mla
+            cache[btype] = {"ckv": jnp.zeros(
+                (n, batch, max_seq, m.kv_lora_rank + m.qk_rope_head_dim), dtype)}
+        elif btype == "rec":
+            w = cfg.lru_width or cfg.d_model
+            cache[btype] = {
+                "h": jnp.zeros((n, batch, w), jnp.float32),
+                "conv": jnp.zeros((n, batch, cfg.conv_width - 1, w), dtype),
+            }
+        elif btype == "mlstm":
+            d_in = xl.PF_MLSTM * cfg.d_model
+            dh = d_in // cfg.n_heads
+            cache[btype] = {
+                "C": jnp.zeros((n, batch, cfg.n_heads, dh, dh), jnp.float32),
+                "n": jnp.zeros((n, batch, cfg.n_heads, dh), jnp.float32),
+                "m": jnp.full((n, batch, cfg.n_heads), -1e30, jnp.float32),
+                "conv": jnp.zeros((n, batch, cfg.conv_width - 1, d_in), dtype),
+            }
+        elif btype == "slstm":
+            D = cfg.d_model
+            cache[btype] = {
+                "c": jnp.zeros((n, batch, D), jnp.float32),
+                "n": jnp.zeros((n, batch, D), jnp.float32),
+                "h": jnp.zeros((n, batch, D), jnp.float32),
+                "m": jnp.full((n, batch, D), -1e30, jnp.float32),
+            }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def apply_block(p, x, btype, cfg: ArchConfig, cos_sin, *, cache=None,
+                cache_index=None, decode=False, chunk=1024):
+    """One residual block. Returns (x, new_cache_slice, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = L.norm_apply(p["ln1"], x, cfg.norm, cfg.norm_eps)
+
+    if btype in ("attn_block", "attn"):
+        window = cfg.local_window if btype == "attn" else 0
+        o, new_c = L.attn_apply(
+            p["attn"], h, cos_sin, dims=_attn_dims(cfg),
+            causal=True, window=window, cache=cache,
+            cache_index=cache_index, chunk=chunk,
+            use_rope=cfg.rope_theta > 0)
+    elif btype == "mla_block":
+        o, new_c = L.mla_apply(p["attn"], h, cos_sin, cfg=cfg, cache=cache,
+                               cache_index=cache_index, chunk=chunk)
+    elif btype == "rec":
+        o, new_c = rg.rec_block_apply(p["rec"], h, cache=cache, decode=decode)
+    elif btype == "mlstm":
+        o, new_c = xl.mlstm_block_apply(p["cell"], h, cfg.n_heads,
+                                        cache=cache, decode=decode,
+                                        chunk=min(chunk, 256))
+        return x + o, new_c, aux
+    elif btype == "slstm":
+        o, new_c = xl.slstm_block_apply(p["cell"], h, cfg.n_heads,
+                                        cache=cache, decode=decode)
+        return x + o, new_c, aux
+    else:
+        raise ValueError(btype)
+
+    x = x + o
+    if cfg.ffn != "none":
+        h2 = L.norm_apply(p["ln2"], x, cfg.norm, cfg.norm_eps)
+        if cfg.moe is not None:
+            f, aux = moe_mod.moe_apply(p["ffn"], h2, cfg)
+        else:
+            f = L.ffn_apply(p["ffn"], h2, cfg.ffn)
+        x = x + f
+    return x, new_c, aux
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _scan_run(params_stack, cache_stack, fn, x, n: int, remat: bool):
+    """Scan fn over n stacked layers. fn(p, c, x) -> (x, new_c, aux)."""
+    body = jax.checkpoint(fn) if remat else fn
+
+    def step(carry, pc):
+        xx, aux_acc = carry
+        p, c = pc
+        xx, new_c, aux = body(p, c, xx)
+        return (xx, aux_acc + aux), new_c
+
+    (x, aux), new_cache = U.scan(step, (x, jnp.float32(0.0)),
+                                 (params_stack, cache_stack))
+    return x, new_cache, aux
+
+
+def forward(params, cfg: ArchConfig, tokens, *, positions=None,
+            positions3=None, vision_embeds=None, cache=None,
+            cache_index=None, decode=False, chunk=1024, remat=False):
+    """Returns (hidden (B,S,D), new_cache, aux_loss). Logits via lm_head()."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if vision_embeds is not None:
+        nv = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, nv:]], axis=1)
+
+    if positions is None:
+        base = cache_index if cache_index is not None else 0
+        positions = base + jnp.arange(S)[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+    cos_sin = None
+    if cfg.rope_theta > 0:
+        cos_sin = L.rope_cos_sin(cfg, positions, positions3=positions3)
+
+    layout = block_layout(cfg)
+    counts = type_counts(cfg)
+    cache = cache if cache is not None else {
+        t: None for t in counts}
+
+    def mk_fn(btype):
+        def fn(p, c, xx):
+            return apply_block(p, xx, btype, cfg, cos_sin, cache=c,
+                               cache_index=cache_index, decode=decode,
+                               chunk=chunk)
+        return fn
+
+    new_cache = {}
+    aux_total = jnp.float32(0.0)
+
+    if not cfg.block_pattern:
+        btype = layout[0]
+        x, nc, aux = _scan_run(params[btype], cache.get(btype), mk_fn(btype),
+                               x, counts[btype], remat)
+        new_cache[btype] = nc
+        aux_total += aux
+    else:
+        # superblock scan: pattern repeated; remainder handled as tail runs.
+        pat = list(cfg.block_pattern)
+        n_full = cfg.n_layers // len(pat)
+        rem = layout[n_full * len(pat):]
+        # per-type split: first (n_full * per-pattern-count) layers go to the
+        # superblock scan; the rest feed the tail.
+        per_pat = {t: pat.count(t) for t in dict.fromkeys(pat)}
+
+        def split_stack(tree, t, head_n):
+            head = jax.tree_util.tree_map(lambda a: a[:head_n], tree)
+            tail = jax.tree_util.tree_map(lambda a: a[head_n:], tree)
+            return head, tail
+
+        heads, tails, cheads, ctails = {}, {}, {}, {}
+        for t, c_pp in per_pat.items():
+            hn = n_full * c_pp
+            heads[t], tails[t] = split_stack(params[t], t, hn)
+            if cache.get(t) is not None:
+                cheads[t], ctails[t] = split_stack(cache[t], t, hn)
+            else:
+                cheads[t], ctails[t] = None, None
+            # reshape heads to (n_full, c_pp, ...)
+            heads[t] = jax.tree_util.tree_map(
+                lambda a: a.reshape(n_full, c_pp, *a.shape[1:]), heads[t])
+            if cheads[t] is not None:
+                cheads[t] = jax.tree_util.tree_map(
+                    lambda a: a.reshape(n_full, c_pp, *a.shape[1:]), cheads[t])
+
+        fns = {t: mk_fn(t) for t in per_pat}
+
+        def superblock(carry, pc):
+            xx, aux_acc = carry
+            ps, cs = pc
+            used = {t: 0 for t in per_pat}
+            new_cs = {t: [] for t in per_pat}
+            for t in pat:
+                i = used[t]
+                p_i = jax.tree_util.tree_map(lambda a: a[i], ps[t])
+                c_i = (jax.tree_util.tree_map(lambda a: a[i], cs[t])
+                       if cs[t] is not None else None)
+                fn = jax.checkpoint(fns[t]) if remat else fns[t]
+                xx, nc, aux = fn(p_i, c_i, xx)
+                aux_acc = aux_acc + aux
+                new_cs[t].append(nc)
+                used[t] += 1
+            stacked_cs = {
+                t: (jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *new_cs[t])
+                    if new_cs[t][0] is not None else cs[t])
+                for t in per_pat}
+            return (xx, aux_acc), stacked_cs
+
+        (x, aux_total), sc = U.scan(
+            superblock, (x, aux_total), (heads, cheads))
+        for t in per_pat:
+            nc = sc[t]
+            if cheads[t] is not None:
+                nc = jax.tree_util.tree_map(
+                    lambda a: a.reshape(-1, *a.shape[2:]), nc)
+                new_cache[t] = nc
+            else:
+                new_cache[t] = None
+
+        # tail (pattern remainder) — homogeneous mini-runs
+        ti = 0
+        while ti < len(rem):
+            t = rem[ti]
+            run = 1
+            while ti + run < len(rem) and rem[ti + run] == t:
+                run += 1
+            x, nc, aux = _scan_run(tails[t], ctails[t], mk_fn(t), x, run, remat)
+            aux_total += aux
+            if ctails[t] is not None:
+                new_cache[t] = jax.tree_util.tree_map(
+                    lambda a, b: jnp.concatenate([a, b]), new_cache[t], nc)
+            ti += run
+
+    x = L.norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return x, new_cache, aux_total
+
+
+def lm_head(params, cfg: ArchConfig, hidden):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("bsd,dv->bsv", hidden, w)
+
+
+def lm_loss(params, cfg: ArchConfig, hidden, targets, mask, *,
+            chunk: int = 512):
+    """Chunked cross-entropy over the sequence (bounds the (B,chunk,V) logits
+    intermediate; vocab stays sharded under TP)."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = hidden.shape[1] // chunk
+
+    def one(args):
+        h, t, m = args
+        logits = lm_head(params, cfg, h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * m), jnp.sum(m)
+
+    hs = hidden.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(B, n, chunk).transpose(1, 0, 2).astype(jnp.float32)
+    losses, counts = U.chunk_map(one, (hs, ts, ms))
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0)

@@ -1,0 +1,177 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+Per the assignment the conv1d/mel frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, D) directly to the encoder.
+Encoder: bidirectional attention + sinusoidal positions. Decoder: causal
+self-attention (cached) + cross-attention over encoder states (K/V cached at
+prefill) + GELU MLP, learned positions, LayerNorm, tied unembedding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.utils import unrollctl as U
+from repro.models import layers as L
+
+
+def _dims(cfg):
+    return L.AttnDims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.resolved_head_dim)
+
+
+def _enc_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.norm_init(cfg.d_model, "layernorm", dtype),
+        "attn": L.attn_init(k1, _dims(cfg), dtype, bias=True),
+        "ln2": L.norm_init(cfg.d_model, "layernorm", dtype),
+        "ffn": L.ffn_init(k2, cfg.d_model, cfg.d_ff, "mlp_gelu", dtype),
+    }
+
+
+def _dec_block_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.norm_init(cfg.d_model, "layernorm", dtype),
+        "self_attn": L.attn_init(k1, _dims(cfg), dtype, bias=True),
+        "ln_x": L.norm_init(cfg.d_model, "layernorm", dtype),
+        "cross_attn": L.attn_init(k2, _dims(cfg), dtype, bias=True),
+        "ln2": L.norm_init(cfg.d_model, "layernorm", dtype),
+        "ffn": L.ffn_init(k3, cfg.d_model, cfg.d_ff, "mlp_gelu", dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig, *, max_dec_seq: int = 4096):
+    dtype = jnp.dtype(cfg.dtype)
+    kE, kP, k1, k2 = jax.random.split(key, 4)
+    ne = cfg.encdec.n_encoder_layers
+    nd = cfg.n_layers
+    return {
+        "embed": L.embed_init(kE, (cfg.vocab_size, cfg.d_model), dtype),
+        "pos_dec": L.embed_init(kP, (max_dec_seq, cfg.d_model), dtype),
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(
+            jax.random.split(k1, ne)),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(
+            jax.random.split(k2, nd)),
+        "enc_norm": L.norm_init(cfg.d_model, "layernorm", dtype),
+        "dec_norm": L.norm_init(cfg.d_model, "layernorm", dtype),
+    }
+
+
+def _cross_attn(p, x, ck, cv, chunk):
+    """Cross-attention with precomputed K/V (B, S_enc, H, hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]) + p["bq"]
+    out = L.chunked_attention(q, ck, cv, causal=False, chunk=chunk)
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"]) + p["bo"]
+
+
+def cross_kv(p, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"]) + p["bk"]
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"]) + p["bv"]
+    return k, v
+
+
+def encode(params, cfg: ArchConfig, frame_embeds, *, chunk=1024, remat=False):
+    B, S, D = frame_embeds.shape
+    pos = L.sinusoidal_positions(S, D).astype(frame_embeds.dtype)
+    x = frame_embeds + pos[None]
+
+    def block(p, xx):
+        h = L.norm_apply(p["ln1"], xx, "layernorm", cfg.norm_eps)
+        o, _ = L.attn_apply(p["attn"], h, None, dims=_dims(cfg), causal=False,
+                            chunk=chunk, use_rope=False)
+        xx = xx + o
+        h2 = L.norm_apply(p["ln2"], xx, "layernorm", cfg.norm_eps)
+        return xx + L.ffn_apply(p["ffn"], h2, "mlp_gelu")
+
+    body = jax.checkpoint(block) if remat else block
+    x, _ = U.scan(lambda c, p: (body(p, c), None), x,
+                  params["enc_blocks"])
+    return L.norm_apply(params["enc_norm"], x, "layernorm", cfg.norm_eps)
+
+
+def _dec_block(p, xx, cfg, *, sc=None, cache_index=None, ck=None, cv=None,
+               chunk=1024):
+    """One decoder block. Returns (x, new_self_cache)."""
+    h = L.norm_apply(p["ln1"], xx, "layernorm", cfg.norm_eps)
+    o, nsc = L.attn_apply(p["self_attn"], h, None, dims=_dims(cfg),
+                          causal=True, cache=sc, cache_index=cache_index,
+                          chunk=chunk, use_rope=False)
+    xx = xx + o
+    h = L.norm_apply(p["ln_x"], xx, "layernorm", cfg.norm_eps)
+    xx = xx + _cross_attn(p["cross_attn"], h, ck, cv, chunk)
+    h = L.norm_apply(p["ln2"], xx, "layernorm", cfg.norm_eps)
+    return xx + L.ffn_apply(p["ffn"], h, "mlp_gelu"), nsc
+
+
+def decode(params, cfg: ArchConfig, tokens, *, enc_out=None, cache=None,
+           cache_index=None, chunk=1024, remat=False):
+    """Decoder forward.
+
+    * train:   enc_out given, cache None        -> (hidden, None)
+    * prefill: enc_out given, cache given       -> fills self + cross caches
+    * decode:  cache given with cross K/V, tokens (B,1) at cache_index
+    """
+    B, S = tokens.shape
+    base = cache_index if cache_index is not None else 0
+    pos_ids = base + jnp.arange(S)
+    x = params["embed"][tokens] + params["pos_dec"][pos_ids][None]
+
+    if cache is None:                      # ---- train path, no caches
+        ck, cv = jax.vmap(lambda p: cross_kv(p["cross_attn"], enc_out))(
+            params["dec_blocks"])
+
+        def block(p, ckl, cvl, xx):
+            out, _ = _dec_block(p, xx, cfg, ck=ckl, cv=cvl, chunk=chunk)
+            return out
+
+        body = jax.checkpoint(block, static_argnums=()) if remat else block
+        x, _ = U.scan(
+            lambda c, pc: (body(pc[0], pc[1], pc[2], c), None),
+            x, (params["dec_blocks"], ck, cv))
+        return L.norm_apply(params["dec_norm"], x, "layernorm",
+                            cfg.norm_eps), None
+
+    if cache_index is None:                # ---- prefill path
+        ck, cv = jax.vmap(lambda p: cross_kv(p["cross_attn"], enc_out))(
+            params["dec_blocks"])
+        ck = ck.astype(cache["ck"].dtype)
+        cv = cv.astype(cache["cv"].dtype)
+    else:                                  # ---- decode path
+        ck, cv = cache["ck"], cache["cv"]
+
+    def block_c(p, c, xx):
+        out, nsc = _dec_block(p, xx, cfg, sc={"k": c["k"], "v": c["v"]},
+                              cache_index=cache_index, ck=c["ck"], cv=c["cv"],
+                              chunk=chunk)
+        return out, nsc
+
+    def step(carry, pc):
+        p, c = pc
+        xx, nsc = block_c(p, c, carry)
+        return xx, nsc
+
+    cs = {"k": cache["k"], "v": cache["v"], "ck": ck, "cv": cv}
+    x, new_sc = U.scan(step, x, (params["dec_blocks"], cs))
+    x = L.norm_apply(params["dec_norm"], x, "layernorm", cfg.norm_eps)
+    new_cache = {"k": new_sc["k"], "v": new_sc["v"], "ck": ck, "cv": cv}
+    return x, new_cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, enc_seq: int,
+               dtype=None):
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    hd = cfg.resolved_head_dim
+    nl, H = cfg.n_layers, cfg.n_kv_heads
+    return {
+        "k": jnp.zeros((nl, batch, max_seq, H, hd), dtype),
+        "v": jnp.zeros((nl, batch, max_seq, H, hd), dtype),
+        "ck": jnp.zeros((nl, batch, enc_seq, cfg.n_heads, hd), dtype),
+        "cv": jnp.zeros((nl, batch, enc_seq, cfg.n_heads, hd), dtype),
+    }
+
+
+def lm_head(params, hidden):
+    return jnp.einsum("bsd,vd->bsv", hidden, params["embed"])

@@ -1,0 +1,51 @@
+"""Int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At multi-pod scale the pod-axis gradient all-reduce crosses DCN (slow links).
+Compressing gradients to int8 with per-tensor scale + error feedback keeps
+the update unbiased in the long run (residuals re-enter next step) and cuts
+cross-pod bytes 4x (fp32) / 2x (bf16).
+
+Usage (inside train_step, around the optimizer):
+    comp, err = compress_with_feedback(grads, err)
+    grads = decompress(comp)           # all-reduce happens on comp under SPMD
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    q: jax.Array      # int8 payload
+    scale: jax.Array  # () f32
+
+
+def _compress_leaf(g, e):
+    gf = g.astype(jnp.float32) + e
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return Compressed(q, scale), gf - deq
+
+
+def compress_with_feedback(grads, err):
+    """grads, err: matching pytrees. Returns (compressed tree, new err)."""
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(err)
+    out = [_compress_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_err = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    return comp, new_err
+
+
+def decompress(comp):
+    return jax.tree_util.tree_map(
+        lambda c: c.q.astype(jnp.float32) * c.scale, comp,
+        is_leaf=lambda x: isinstance(x, Compressed))
+
+
+def init_error(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,105 @@
+"""Training step: loss + grad (+microbatch accumulation) + AdamW update.
+
+Microbatching: the global batch is reshaped to (n_micro, micro, ...) and
+scanned, accumulating fp32 grads — the standard grad-accumulation pattern
+that bounds activation memory at large global batch. Remat is applied at the
+block level inside the model (cfg via Model(remat=True)).
+
+Optional int8 error-feedback gradient compression (optim/compression.py) is
+applied before the (pod-axis) all-reduce when enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim import compression as comp
+from repro.optim.schedule import cosine_schedule
+from repro.utils import unrollctl as U
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: Any
+    grad_err: Any = None  # error-feedback residual (compression only)
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step, self.grad_err), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_train_state(model: Model, key, *, use_compression=False) -> TrainState:
+    params = model.init_params(key)
+    opt = adamw_init(params)
+    err = comp.init_error(params) if use_compression else None
+    return TrainState(params=params, opt=opt, step=jnp.zeros((), jnp.int32),
+                      grad_err=err)
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    n_microbatches: int = 1, warmup: int = 100,
+                    total_steps: int = 10000, use_compression: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        return model.loss_fn(params, mb)
+
+    def compute_grads(params, batch):
+        if n_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, grads
+
+        def reshape(x):
+            return x.reshape(n_microbatches, x.shape[0] // n_microbatches,
+                             *x.shape[1:])
+
+        # positions3 has batch at dim 1
+        mbs = {}
+        for k, v in batch.items():
+            if k == "positions3":
+                mbs[k] = v.reshape(v.shape[0], n_microbatches, -1,
+                                   v.shape[-1]).transpose(1, 0, 2, 3)
+            else:
+                mbs[k] = reshape(v)
+
+        def micro(carry, mb):
+            loss_acc, grad_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            grad_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+            return (loss_acc + loss, grad_acc), None
+
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = U.scan(micro, (jnp.float32(0.0), zero), mbs)
+        inv = 1.0 / n_microbatches
+        return loss_sum * inv, jax.tree_util.tree_map(lambda g: g * inv, grads)
+
+    def train_step(state: TrainState, batch):
+        loss, grads = compute_grads(state.params, batch)
+        new_err = state.grad_err
+        if use_compression:
+            compressed, new_err = comp.compress_with_feedback(
+                grads, state.grad_err)
+            grads = comp.decompress(compressed)
+        lr_scale = cosine_schedule(state.step, warmup=warmup,
+                                   total=total_steps)
+        params, opt, metrics = adamw_update(state.params, grads, state.opt,
+                                            opt_cfg, lr_scale=lr_scale)
+        metrics["loss"] = loss
+        return TrainState(params=params, opt=opt, step=state.step + 1,
+                          grad_err=new_err), metrics
+
+    return train_step

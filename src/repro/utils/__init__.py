@@ -1,0 +1,5 @@
+from repro.utils.treeutil import (
+    tree_bytes,
+    tree_count,
+    tree_map_with_path_str,
+)

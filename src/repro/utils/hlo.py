@@ -1,0 +1,130 @@
+"""HLO/StableHLO text analysis: collective-traffic accounting for rooflines.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes but not collective
+traffic, so we parse the module text and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Two formats are handled:
+  * optimized HLO (``compiled.as_text()``):
+        %all-reduce.5 = bf16[8,128]{1,0} all-reduce(bf16[8,128]{1,0} %x), ...
+    -> operand types appear inline in the parens.
+  * StableHLO (``lowered.as_text()``):
+        "stablehlo.all_reduce"(%arg) ... : (tensor<8x128xbf16>) -> ...
+    -> the function-type signature carries operand types (may be on the
+       closing line of a region).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "i8": 1, "ui8": 1,
+    "s16": 2, "u16": 2, "i16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "i32": 4, "ui32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "i64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# optimized-HLO shaped type like bf16[8,128]{1,0} or f32[] — dims optional
+_HLO_TYPE = re.compile(r"\b(pred|bf16|f16|f32|f64|s4|s8|s16|s32|s64|u4|u8"
+                       r"|u16|u32|u64|c64|c128)\[([0-9,]*)\]")
+# stablehlo tensor<8x128xf32> (or tensor<f32>)
+_SH_TYPE = re.compile(r"tensor<([0-9x]*)x?"
+                      r"(pred|i1|bf16|f16|f32|f64|i8|i16|i32|i64|ui8|ui16"
+                      r"|ui32|ui64)>")
+
+
+def _hlo_type_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _sh_type_bytes(dims: str, dtype: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split("x"):
+            if d:
+                n *= int(d)
+    key = {"i1": "pred"}.get(dtype, dtype)
+    return n * _DTYPE_BYTES.get(key, 4)
+
+
+def collective_bytes_from_hlo(text: str) -> dict:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    out: dict[str, int] = defaultdict(int)
+    for line in text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(?:\([^)]*\)|\S+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        op = m.group(1)
+        kind = None
+        for k in COLLECTIVE_KINDS:
+            if op == k or op.startswith(k + "."):
+                kind = k
+                break
+        if kind is None:
+            continue
+        # operand types: everything inside the outermost call parens
+        call = ls.find(op)
+        paren = ls.find("(", call)
+        if paren == -1:
+            continue
+        operand_str = ls[paren:]
+        types = _HLO_TYPE.findall(operand_str)
+        # the result type (before the op name) is excluded by slicing at the
+        # op name; operands may include several tensors (tuples)
+        for dt, dims in types:
+            out[kind] += _hlo_type_bytes(dt, dims)
+    return dict(out)
+
+
+def collective_bytes_from_stablehlo(text: str) -> dict:
+    """Sum operand bytes per collective kind from StableHLO text."""
+    out: dict[str, int] = defaultdict(int)
+    # ops may span a region; find op name, then the next `: (types) ->`
+    names = {
+        "all_gather": "all-gather", "all_reduce": "all-reduce",
+        "reduce_scatter": "reduce-scatter", "all_to_all": "all-to-all",
+        "collective_permute": "collective-permute",
+    }
+    pat = re.compile(r"stablehlo\.(all_gather|all_reduce|reduce_scatter"
+                     r"|all_to_all|collective_permute)")
+    sig = re.compile(r":\s*\(([^)]*)\)\s*->")
+    for m in pat.finditer(text):
+        s = sig.search(text, m.end())
+        if not s:
+            continue
+        for dims, dt in _SH_TYPE.findall(s.group(1)):
+            out[names[m.group(1)]] += _sh_type_bytes(dims, dt)
+    return dict(out)
+
+
+def collective_bytes(compiled=None, lowered=None) -> dict:
+    """Best-effort collective accounting; optimized HLO preferred."""
+    if compiled is not None:
+        try:
+            txt = compiled.as_text()
+            res = collective_bytes_from_hlo(txt)
+            if res:
+                return res
+        except Exception:
+            pass
+    if lowered is not None:
+        try:
+            return collective_bytes_from_stablehlo(lowered.as_text())
+        except Exception:
+            pass
+    return {}
+
+
+def count_ops(text: str, names: tuple[str, ...]) -> dict:
+    """Rough op-frequency counter over HLO text (perf-debugging aid)."""
+    return {n: len(re.findall(rf"\b{re.escape(n)}[.(]", text)) for n in names}

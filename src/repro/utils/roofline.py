@@ -1,0 +1,87 @@
+"""Roofline-term computation from compiled dry-run artifacts.
+
+TPU v5e constants (per chip):
+    peak bf16   197 TFLOP/s  (int8 via MXU ~2x)
+    HBM bw      819 GB/s
+    ICI         ~50 GB/s/link (per-chip effective for ring collectives)
+
+Terms (seconds, per chip — cost_analysis FLOPs/bytes are whole-program, so
+divide by chip count):
+    compute    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes   / (chips * HBM_BW)
+    collective = coll_bytes  / (chips * ICI_BW)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_OPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # whole-program HLO FLOPs
+    hbm_bytes: float             # whole-program HLO bytes accessed
+    coll_bytes: float            # summed collective operand bytes
+    chips: int
+    model_flops: float = 0.0     # analytic "useful" FLOPs (6ND etc.)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline-model step time (no overlap assumption = max)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the ideal (useful-compute-only) time: how close the
+        whole program is to the pure-MFU roofline."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        return ideal / self.t_bound if self.t_bound > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_train(n_params_active: float, tokens: float) -> float:
+    """6·N·D for a train step (fwd 2ND + bwd 4ND)."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_decode(n_params_active: float, tokens: float,
+                       kv_read_flops: float = 0.0) -> float:
+    """2·N per generated token (+ attention score flops if significant)."""
+    return 2.0 * n_params_active * tokens + kv_read_flops

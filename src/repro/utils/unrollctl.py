@@ -1,0 +1,63 @@
+"""Analysis-unroll control.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip count,
+so a scanned-over-layers model under-reports FLOPs/bytes/collectives by ~L×.
+For roofline analysis runs the dry-run flips this flag; every scan in the
+model stack then unrolls (scan(unroll=length) — the while loop disappears or
+becomes trip-1) and lax.map-style chunk loops turn into Python loops. The
+compiled HLO then carries the TRUE whole-step cost.
+
+Production/training keeps scans rolled (compile time, memory).
+
+Known residual under-counts when unrolled (documented in EXPERIMENTS.md):
+  * sLSTM time-step scan (xlstm): only the tiny block-diagonal recurrent
+    matmuls live inside; the bulk (w_zifo projection) is outside. <1% error.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+_UNROLL = False
+
+
+def analysis_unroll_enabled() -> bool:
+    return _UNROLL
+
+
+def set_analysis_unroll(on: bool):
+    global _UNROLL
+    _UNROLL = bool(on)
+
+
+@contextlib.contextmanager
+def analysis_unroll(on: bool = True):
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = bool(on)
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def scan(f, init, xs, *, length=None, unrollable: bool = True):
+    """lax.scan that fully unrolls under analysis mode."""
+    if length is None:
+        length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    u = length if (_UNROLL and unrollable) else 1
+    return jax.lax.scan(f, init, xs, length=length, unroll=u)
+
+
+def chunk_map(f, xs):
+    """lax.map that becomes a Python loop (true instruction replication)
+    under analysis mode. xs: pytree with equal leading dims."""
+    if not _UNROLL:
+        return jax.lax.map(f, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    outs = []
+    for i in range(n):
+        outs.append(f(jax.tree_util.tree_map(lambda a: a[i], xs)))
+    return jax.tree_util.tree_map(lambda *ys: jnp.stack(ys), *outs)

@@ -1,0 +1,7 @@
+# NOTE: deliberately NO XLA_FLAGS here — smoke tests and benches must see the
+# real single-device CPU; only launch/dryrun.py forces 512 host devices, and
+# multi-device tests spawn subprocesses (tests/test_distributed.py).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,69 @@
+"""Reference-DB blocking invariants (paper §II-B layout)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blocking import (PAD_PMZ, build_reference_db,
+                                 candidate_block_stats, shard_reference_db)
+
+
+def _db(seed=0, n=300, max_r=32):
+    rng = np.random.default_rng(seed)
+    W = 4
+    hvs = jnp.asarray(rng.integers(0, 2**32, size=(n, W), dtype=np.uint64).astype(np.uint32))
+    pmz = jnp.asarray(rng.uniform(400, 1800, n).astype(np.float32))
+    charge = jnp.asarray(rng.choice([2, 3], n).astype(np.int32))
+    decoy = jnp.asarray(rng.random(n) < 0.5)
+    return build_reference_db(hvs, pmz, charge, decoy, max_r=max_r), pmz, charge
+
+
+@given(st.integers(0, 1000), st.integers(50, 400), st.sampled_from([16, 32, 64]))
+@settings(max_examples=10, deadline=None)
+def test_every_ref_in_exactly_one_row(seed, n, max_r):
+    db, pmz, charge = _db(seed, n, max_r)
+    orig = np.asarray(db.orig_idx)
+    real = orig[orig >= 0]
+    assert len(real) == n
+    assert len(np.unique(real)) == n            # partition, no dup/loss
+    assert db.n_rows % max_r == 0               # block-aligned padding
+    assert db.n_rows == db.n_blocks * max_r
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_blocks_charge_pure_and_sorted(seed):
+    db, _, _ = _db(seed)
+    pmz = np.asarray(db.pmz)
+    charge = np.asarray(db.charge)
+    bmin = np.asarray(db.block_min); bmax = np.asarray(db.block_max)
+    bch = np.asarray(db.block_charge)
+    for b in range(db.n_blocks):
+        rows = slice(b * db.max_r, (b + 1) * db.max_r)
+        c = charge[rows]; p = pmz[rows]
+        real = c >= 0
+        if real.any():
+            assert len(np.unique(c[real])) == 1          # charge-pure
+            assert (c[real] == bch[b]).all()
+            rp = p[real]
+            assert (np.diff(rp) >= 0).all()              # pmz-sorted
+            assert np.isclose(rp.min(), bmin[b])
+            assert np.isclose(rp.max(), bmax[b])
+        # padding rows always sink to the end with PAD_PMZ
+        assert (p[~real] == np.float32(np.finfo(np.float32).max)).all()
+
+
+def test_shard_padding_preserves_rows():
+    db, _, _ = _db(3, n=200, max_r=16)
+    for s in (3, 4, 7):
+        sh = shard_reference_db(db, s)
+        assert sh.n_blocks % s == 0
+        o1 = np.asarray(db.orig_idx); o2 = np.asarray(sh.orig_idx)
+        assert set(o1[o1 >= 0]) == set(o2[o2 >= 0])
+
+
+def test_candidate_stats_reduction_grows_with_smaller_tol():
+    db, pmz, charge = _db(5, n=2000, max_r=32)
+    wide = candidate_block_stats(db, np.asarray(pmz)[:50], np.asarray(charge)[:50], 300.0)
+    narrow = candidate_block_stats(db, np.asarray(pmz)[:50], np.asarray(charge)[:50], 25.0)
+    assert narrow["reduction"] > wide["reduction"] >= 1.0

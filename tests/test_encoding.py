@@ -1,0 +1,88 @@
+"""ID-Level HD encoding properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.core.encoding import (Codebooks, PreprocessedSpectra,
+                                 encode_spectra, make_codebooks,
+                                 preprocess_spectra)
+
+DIM = 256
+
+
+def _cb(seed=0, n_bins=100, n_levels=8):
+    return make_codebooks(jax.random.PRNGKey(seed), n_bins=n_bins,
+                          n_levels=n_levels, dim=DIM)
+
+
+def test_encode_deterministic():
+    cb = _cb()
+    bins = jnp.array([[1, 5, 9, 0]]); levels = jnp.array([[0, 3, 7, 0]])
+    mask = jnp.array([[True, True, True, False]])
+    sp = PreprocessedSpectra(bins, levels, mask, None, None)
+    a = np.asarray(encode_spectra(sp, cb))
+    b = np.asarray(encode_spectra(sp, cb))
+    assert (a == b).all()
+
+
+def test_encode_permutation_invariant():
+    """Bundling is a commutative reduction over peaks."""
+    cb = _cb()
+    rng = np.random.default_rng(0)
+    P = 12
+    bins = rng.integers(0, 100, size=(1, P))
+    levels = rng.integers(0, 8, size=(1, P))
+    perm = rng.permutation(P)
+    sp1 = PreprocessedSpectra(jnp.asarray(bins), jnp.asarray(levels),
+                              jnp.ones((1, P), bool), None, None)
+    sp2 = PreprocessedSpectra(jnp.asarray(bins[:, perm]),
+                              jnp.asarray(levels[:, perm]),
+                              jnp.ones((1, P), bool), None, None)
+    assert (np.asarray(encode_spectra(sp1, cb))
+            == np.asarray(encode_spectra(sp2, cb))).all()
+
+
+def test_level_hvs_correlation_monotonic():
+    """Adjacent intensity levels stay similar; far levels diverge."""
+    cb = _cb(n_levels=16)
+    lv = cb.level_hvs
+    d01 = int(packing.hamming_packed(lv[0], lv[1]))
+    d0f = int(packing.hamming_packed(lv[0], lv[15]))
+    assert d01 < d0f
+    assert abs(d0f - DIM // 2) <= DIM // 8  # ends ~orthogonal-ish by design
+
+
+def test_similar_spectra_have_similar_hvs():
+    """Small perturbations move the HV less than random replacement."""
+    cb = _cb()
+    rng = np.random.default_rng(2)
+    P = 24
+    bins = rng.integers(0, 100, size=(1, P))
+    levels = rng.integers(0, 8, size=(1, P))
+    mask = np.ones((1, P), bool)
+
+    def enc(b, l):
+        return encode_spectra(PreprocessedSpectra(
+            jnp.asarray(b), jnp.asarray(l), jnp.asarray(mask), None, None), cb)
+
+    base = enc(bins, levels)
+    lv2 = levels.copy(); lv2[0, :3] = (lv2[0, :3] + 1) % 8  # 3 peaks 1 level off
+    near = enc(bins, lv2)
+    rnd = enc(rng.integers(0, 100, size=(1, P)), rng.integers(0, 8, size=(1, P)))
+    d_near = int(packing.hamming_packed(base[0], near[0]))
+    d_rand = int(packing.hamming_packed(base[0], rnd[0]))
+    assert d_near < d_rand
+
+
+def test_preprocess_noise_filter_and_binning():
+    mz = jnp.array([[300.0, 500.0, 700.0, 0.0]])
+    inten = jnp.array([[100.0, 0.5, 50.0, 0.0]])  # 0.5 < 1% of 100
+    out = preprocess_spectra(mz, inten, jnp.array([800.0]), jnp.array([2]),
+                             bin_size=1.0, mz_min=200.0, mz_max=2000.0,
+                             n_levels=8)
+    m = np.asarray(out.mask[0])
+    assert m.tolist() == [True, False, True, False]
+    assert int(out.bins[0, 0]) == 100  # (300-200)/1.0
+    assert int(out.levels[0, 0]) == 7  # base peak -> top level

@@ -1,0 +1,69 @@
+"""Target-decoy FDR filter."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fdr import compute_q_values, fdr_filter
+
+
+def test_known_small_case():
+    # scores descending: T T T D T  -> at rank 4 (the decoy) fdr=1/3
+    scores = jnp.array([9.0, 8.0, 7.0, 6.0, 5.0])
+    decoy = jnp.array([False, False, False, True, False])
+    valid = jnp.ones(5, bool)
+    q = np.asarray(compute_q_values(scores, decoy, valid))
+    assert np.isclose(q[0], 0.0) and np.isclose(q[2], 0.0)
+    assert np.isclose(q[4], 1.0 / 4.0)  # after the decoy: 1 decoy / 4 targets
+    res = fdr_filter(scores, decoy, valid, threshold=0.01)
+    assert int(res.n_accepted) == 3
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=15, deadline=None)
+def test_q_values_monotone_in_rank(seed):
+    rng = np.random.default_rng(seed)
+    n = 64
+    scores = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    decoy = jnp.asarray(rng.random(n) < 0.4)
+    valid = jnp.asarray(rng.random(n) < 0.9)
+    q = np.asarray(compute_q_values(scores, decoy, valid))
+    s = np.asarray(scores); v = np.asarray(valid)
+    order = np.argsort(-s[v])
+    qv = q[v][order]
+    assert (np.diff(qv) >= -1e-7).all()      # monotone along the ranking
+    assert (q >= 0).all() and (q <= 1.0 + 1e-7).all()
+
+
+@given(st.floats(0.01, 0.5), st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_threshold_monotonicity(thr, seed):
+    rng = np.random.default_rng(seed)
+    n = 128
+    scores = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    decoy = jnp.asarray(rng.random(n) < 0.3)
+    valid = jnp.ones(n, bool)
+    lo = fdr_filter(scores, decoy, valid, threshold=thr)
+    hi = fdr_filter(scores, decoy, valid, threshold=min(2 * thr, 1.0))
+    assert int(hi.n_accepted) >= int(lo.n_accepted)
+    # decoys never reported
+    assert not np.asarray(lo.accept)[np.asarray(decoy)].any()
+
+
+def test_random_queries_yield_no_identifications():
+    """FDR calibration: queries matching nothing real should produce ~zero
+    accepted identifications at 1% — the target-decoy guarantee."""
+    from repro.core import OMSConfig, OMSPipeline
+    from repro.data.spectra import LibraryConfig, make_dataset, SpectraSet
+    import jax
+    cfg = OMSConfig(dim=512, max_r=64, q_block=8, n_levels=8)
+    ds = make_dataset(LibraryConfig(n_refs=512, n_queries=64, seed=9))
+    pipe = OMSPipeline(cfg, ds.refs)
+    key = jax.random.PRNGKey(123)
+    q = ds.queries
+    rnd = SpectraSet(
+        mz=jax.random.uniform(key, q.mz.shape, minval=200.0, maxval=2000.0)
+        * (q.intensity > 0),
+        intensity=q.intensity,
+        pmz=q.pmz, charge=q.charge)
+    out = pipe.search(rnd)
+    assert int(out.open_fdr.n_accepted) <= max(2, int(0.05 * 64))

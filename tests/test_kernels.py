@@ -1,0 +1,103 @@
+"""Pallas kernel sweeps: shapes × dtypes vs pure-jnp oracles (exact)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.encoding import (PreprocessedSpectra, encode_spectra,
+                                 make_codebooks)
+from repro.kernels.hamming import ops as hops
+from repro.kernels.hamming import ref as href
+from repro.kernels.hamming_mxu import ops as mops
+from repro.kernels.hamming_mxu import ref as mref
+from repro.kernels.hdencode import ops as eops
+
+
+def _rand_packed(key, n, w):
+    return jax.random.randint(key, (n, w), 0, 2**31 - 1,
+                              dtype=jnp.int32).astype(jnp.uint32)
+
+
+SHAPES = [
+    (8, 16, 4),     # tiny
+    (17, 33, 8),    # non-tile-aligned
+    (16, 256, 16),  # tile-aligned
+    (5, 700, 7),    # odd words
+]
+
+
+@pytest.mark.parametrize("Q,R,W", SHAPES)
+def test_hamming_vpu_kernel_sweep(Q, R, W):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(Q * R))
+    q, r = _rand_packed(k1, Q, W), _rand_packed(k2, R, W)
+    assert (np.asarray(hops.hamming_matrix(q, r))
+            == np.asarray(href.hamming_matrix(q, r))).all()
+
+
+@pytest.mark.parametrize("Q,R,W", SHAPES)
+def test_hamming_mxu_kernel_sweep(Q, R, W):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(Q + R))
+    q, r = _rand_packed(k1, Q, W), _rand_packed(k2, R, W)
+    assert (np.asarray(mops.hamming_matrix(q, r, W * 32))
+            == np.asarray(mref.hamming_matrix(q, r, W * 32))).all()
+
+
+@pytest.mark.parametrize("q_tile,r_tile,word_tile", [
+    (8, 64, 4), (16, 128, 16), (4, 32, 2)])
+def test_hamming_kernel_tiling_invariance(q_tile, r_tile, word_tile):
+    """Block-shape knobs (the paper's Q_BLOCK/MAX_R/FACTOR) never change
+    results — only the schedule."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    q, r = _rand_packed(k1, 24, 8), _rand_packed(k2, 300, 8)
+    base = np.asarray(href.hamming_matrix(q, r))
+    got = np.asarray(hops.hamming_matrix(
+        q, r, q_tile=q_tile, r_tile=r_tile, word_tile=word_tile))
+    assert (got == base).all()
+
+
+@pytest.mark.parametrize("Q,R,W", [(8, 64, 4), (30, 260, 8)])
+def test_fused_search_kernel_sweep(Q, R, W):
+    key = jax.random.PRNGKey(Q)
+    ks = jax.random.split(key, 4)
+    q, r = _rand_packed(ks[0], Q, W), _rand_packed(ks[1], R, W)
+    qp = jax.random.uniform(ks[2], (Q,), minval=400, maxval=1800)
+    rp = jax.random.uniform(ks[3], (R,), minval=400, maxval=1800)
+    qc = jnp.where(jnp.arange(Q) % 2 == 0, 2, 3).astype(jnp.int32)
+    rc = jnp.where(jnp.arange(R) % 3 == 0, 3, 2).astype(jnp.int32)
+    o = href.fused_search(q, r, qp, rp, qc, rc, dim=W * 32)
+    g = hops.fused_search(q, r, qp, rp, qc, rc, dim=W * 32)
+    for name, a, b in zip(("std_sim", "std_idx", "open_sim", "open_idx"), o, g):
+        assert (np.asarray(a) == np.asarray(b)).all(), name
+
+
+@pytest.mark.parametrize("B,P,F,L,W", [
+    (4, 10, 50, 8, 4), (23, 40, 500, 16, 8), (16, 64, 100, 32, 2)])
+def test_hdencode_kernel_sweep(B, P, F, L, W):
+    D = W * 32
+    cb = make_codebooks(jax.random.PRNGKey(5), n_bins=F, n_levels=L, dim=D)
+    ks = jax.random.split(jax.random.PRNGKey(B * P), 3)
+    bins = jax.random.randint(ks[0], (B, P), 0, F)
+    levels = jax.random.randint(ks[1], (B, P), 0, L)
+    mask = jax.random.bernoulli(ks[2], 0.8, (B, P))
+    sp = PreprocessedSpectra(bins, levels, mask, None, None)
+    oracle = np.asarray(encode_spectra(sp, cb))
+    got = np.asarray(eops.hdencode(bins, levels, mask, cb.id_hvs,
+                                   cb.level_hvs, cb.tiebreak))
+    assert (oracle == got).all()
+
+
+def test_hdencode_all_masked_spectrum():
+    """A spectrum with zero surviving peaks must not crash (tie on 0 counts
+    resolves to the tiebreak HV)."""
+    D, F, L = 128, 20, 4
+    cb = make_codebooks(jax.random.PRNGKey(0), n_bins=F, n_levels=L, dim=D)
+    B, P = 3, 5
+    bins = jnp.zeros((B, P), jnp.int32)
+    levels = jnp.zeros((B, P), jnp.int32)
+    mask = jnp.zeros((B, P), bool)
+    sp = PreprocessedSpectra(bins, levels, mask, None, None)
+    oracle = np.asarray(encode_spectra(sp, cb))
+    got = np.asarray(eops.hdencode(bins, levels, mask, cb.id_hvs,
+                                   cb.level_hvs, cb.tiebreak))
+    assert (oracle == got).all()
+    assert (oracle == np.asarray(cb.tiebreak)).all()

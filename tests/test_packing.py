@@ -1,0 +1,71 @@
+"""Unit + property tests for HV bit-packing and Hamming primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_roundtrip(seed, words):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(3, words * 32)).astype(np.uint8)
+    packed = packing.pack_bits(jnp.asarray(bits))
+    assert packed.dtype == jnp.uint32
+    un = np.asarray(packing.unpack_bits(packed))
+    assert (un == bits).all()
+
+
+@given(st.integers(0, 2**31), st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_hamming_metric_axioms(seed, words):
+    rng = np.random.default_rng(seed)
+    a, b, c = (jnp.asarray(rng.integers(0, 2**32, size=(words,), dtype=np.uint64)
+                           .astype(np.uint32)) for _ in range(3))
+    dab = int(packing.hamming_packed(a, b))
+    dba = int(packing.hamming_packed(b, a))
+    daa = int(packing.hamming_packed(a, a))
+    dac = int(packing.hamming_packed(a, c))
+    dbc = int(packing.hamming_packed(b, c))
+    assert dab == dba               # symmetry
+    assert daa == 0                 # identity
+    assert 0 <= dab <= words * 32   # bounds
+    assert dac <= dab + dbc         # triangle inequality
+
+
+def test_hamming_matrix_matches_scalar():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.integers(0, 2**32, size=(5, 4), dtype=np.uint64).astype(np.uint32))
+    r = jnp.asarray(rng.integers(0, 2**32, size=(7, 4), dtype=np.uint64).astype(np.uint32))
+    mat = np.asarray(packing.hamming_matrix_packed(q, r))
+    for i in range(5):
+        for j in range(7):
+            assert mat[i, j] == int(packing.hamming_packed(q[i], r[j]))
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_mxu_equals_vpu(seed):
+    rng = np.random.default_rng(seed)
+    W = 4
+    q = jnp.asarray(rng.integers(0, 2**32, size=(6, W), dtype=np.uint64).astype(np.uint32))
+    r = jnp.asarray(rng.integers(0, 2**32, size=(9, W), dtype=np.uint64).astype(np.uint32))
+    vpu = np.asarray(packing.hamming_matrix_packed(q, r))
+    mxu = np.asarray(packing.hamming_matrix_mxu(q, r, W * 32))
+    assert (vpu == mxu).all()
+
+
+def test_pm1_dot_identity():
+    """dot(pm1(a), pm1(b)) == D - 2*hamming — the MXU formulation."""
+    rng = np.random.default_rng(1)
+    W, D = 3, 96
+    a = jnp.asarray(rng.integers(0, 2**32, size=(W,), dtype=np.uint64).astype(np.uint32))
+    b = jnp.asarray(rng.integers(0, 2**32, size=(W,), dtype=np.uint64).astype(np.uint32))
+    pa = packing.packed_to_pm1(a, jnp.int32)
+    pb = packing.packed_to_pm1(b, jnp.int32)
+    dot = int(jnp.sum(pa * pb))
+    ham = int(packing.hamming_packed(a, b))
+    assert dot == D - 2 * ham

@@ -1,0 +1,77 @@
+"""Blocked dual-window search semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import OMSConfig, OMSPipeline
+from repro.data.spectra import LibraryConfig, make_dataset
+
+CFG = OMSConfig(dim=512, max_r=64, q_block=8, n_levels=8)
+
+
+def _pipe(seed=0, n_refs=512, n_queries=48):
+    ds = make_dataset(LibraryConfig(n_refs=n_refs, n_queries=n_queries,
+                                    seed=seed))
+    return OMSPipeline(CFG, ds.refs), ds
+
+
+@given(st.integers(0, 30))
+@settings(max_examples=6, deadline=None)
+def test_blocked_equals_exhaustive(seed):
+    pipe, ds = _pipe(seed)
+    blk = pipe.search(ds.queries).result
+    exh = pipe.search(ds.queries, exhaustive=True).result
+    for f in ("std_idx", "std_sim", "open_idx", "open_sim"):
+        assert (np.asarray(getattr(blk, f)) == np.asarray(getattr(exh, f))).all(), f
+
+
+def test_backends_agree():
+    pipe, ds = _pipe(1)
+    ref = pipe.search(ds.queries).result
+    for be in ("mxu", "kernel_vpu", "kernel_mxu"):
+        got = pipe.search(ds.queries, backend=be).result
+        for f in ("std_idx", "std_sim", "open_idx", "open_sim"):
+            assert (np.asarray(getattr(got, f))
+                    == np.asarray(getattr(ref, f))).all(), (be, f)
+
+
+def test_windows_nested():
+    """std window ⊂ open window: any std match must also be the open match
+    or be beaten by a better (wider-window) one."""
+    pipe, ds = _pipe(2)
+    r = pipe.search(ds.queries).result
+    std_sim = np.asarray(r.std_sim); open_sim = np.asarray(r.open_sim)
+    has_std = std_sim >= 0
+    assert (open_sim[has_std] >= std_sim[has_std]).all()
+
+
+def test_charge_respected():
+    pipe, ds = _pipe(3)
+    r = pipe.search(ds.queries).result
+    qc = np.asarray(ds.queries.charge)
+    rows = np.asarray(r.open_row)
+    dbc = np.asarray(pipe.db.charge)
+    ok = rows >= 0
+    assert (dbc[rows[ok]] == qc[ok]).all()
+
+
+def test_open_window_respected():
+    pipe, ds = _pipe(4)
+    r = pipe.search(ds.queries).result
+    qp = np.asarray(ds.queries.pmz)
+    rows = np.asarray(r.open_row)
+    dbp = np.asarray(pipe.db.pmz)
+    ok = rows >= 0
+    assert (np.abs(dbp[rows[ok]] - qp[ok]) <= CFG.open_tol_da + 1e-3).all()
+
+
+def test_min_sim_threshold():
+    pipe, ds = _pipe(5)
+    hvs, qp, qc = pipe.encode_queries(ds.queries)
+    from repro.core.search import oms_search
+    params = pipe.search_params(qp, qc)
+    strict = params._replace(min_sim=CFG.dim + 1)  # impossible similarity
+    r = oms_search(pipe.db, hvs, qp, qc, strict, dim=CFG.dim)
+    assert (np.asarray(r.open_idx) == -1).all()
+    assert (np.asarray(r.std_idx) == -1).all()

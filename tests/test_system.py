@@ -1,0 +1,70 @@
+"""End-to-end behaviour tests: the paper's claims on synthetic Table-I data.
+
+These validate the *semantic* claims RapidOMS makes:
+  1. open search finds modified spectra that standard search cannot (the OMS
+     value proposition, Fig. 1/5);
+  2. blocked (pruned) search loses nothing vs exhaustive HyperOMS-style
+     scanning (the §II-B optimization is lossless);
+  3. HDC Hamming quality is competitive with dense cosine scoring (Fig. 5);
+  4. the 1% FDR filter reports a competitive identification rate on real-ish
+     queries and ~nothing on junk queries.
+"""
+import numpy as np
+import pytest
+
+from repro.core import OMSConfig, OMSPipeline
+from repro.core.baselines import bin_spectra_dense, shifted_cosine
+from repro.data.spectra import LibraryConfig, make_dataset
+
+CFG = OMSConfig(dim=1024, max_r=128, q_block=8, n_levels=16)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset(LibraryConfig(n_refs=1536, n_queries=96, seed=11))
+    pipe = OMSPipeline(CFG, ds.refs)
+    out = pipe.search(ds.queries)
+    return ds, pipe, out
+
+
+def test_open_search_finds_modifications(setup):
+    ds, pipe, out = setup
+    src = np.asarray(ds.query_source)
+    mod = np.asarray(ds.query_modified)
+    open_hit = np.asarray(out.result.open_idx) == src
+    std_hit = np.asarray(out.result.std_idx) == src
+    assert open_hit[mod].mean() > 0.6          # OMS recovers modified spectra
+    assert std_hit[mod].mean() < 0.05          # standard search cannot
+    assert std_hit[~mod].mean() > 0.8          # but works for unmodified
+    assert open_hit.mean() > std_hit.mean()
+
+
+def test_blocked_equals_exhaustive_e2e(setup):
+    ds, pipe, out = setup
+    exh = pipe.search(ds.queries, exhaustive=True)
+    for f in ("std_idx", "std_sim", "open_idx", "open_sim"):
+        assert (np.asarray(getattr(out.result, f))
+                == np.asarray(getattr(exh.result, f))).all()
+
+
+def test_hdc_quality_competitive_with_cosine(setup):
+    ds, pipe, out = setup
+    # dense shifted-cosine (ANN-SoLo-style) on the same data
+    q = ds.queries; r = ds.refs
+    kw = dict(bin_size=0.5, mz_min=CFG.mz_min, mz_max=CFG.mz_max)
+    qv = bin_spectra_dense(q.mz, q.intensity, **kw)
+    rv = bin_spectra_dense(r.mz, r.intensity, **kw)
+    cos = shifted_cosine(qv, rv, q.pmz, r.pmz, q.charge, r.charge,
+                         bin_size=0.5)
+    src = np.asarray(ds.query_source)
+    hdc_recall = (np.asarray(out.result.open_idx) == src).mean()
+    cos_recall = (np.asarray(cos.open_idx) == src).mean()
+    # paper: identification rates within the 33-66% SOTA band; here we ask
+    # HDC to be within 15 points of the dense-cosine oracle
+    assert hdc_recall > cos_recall - 0.15
+
+
+def test_identification_rate_band(setup):
+    ds, pipe, out = setup
+    rate = int(out.open_fdr.n_accepted) / len(np.asarray(ds.query_source))
+    assert rate > 0.33    # paper's observed band lower edge
