@@ -33,8 +33,8 @@ def main():
 
     pipe = OMSPipeline(cfg, ds.refs)
     out = pipe.search(ds.queries)
-    rapid_hit = np.asarray(out.result.open_idx) == src
-    accepted = np.asarray(out.open_fdr.accept)
+    rapid_hit = np.asarray(out.result.open_idx[:, 0]) == src
+    accepted = np.asarray(out.open_fdr.accept[:, 0])
     rapid_ids = rapid_hit & accepted
 
     q, r = ds.queries, ds.refs

@@ -1,0 +1,108 @@
+"""Fused-kernel vs matrix-backend search: wall time + peak intermediate.
+
+The matrix backends materialise a (Qb, k_blocks*max_r) similarity matrix per
+query block (and, on the XLA vpu path, a (Qb, Rk, W) xor/popcount
+intermediate before the word reduction); the fused §II-C kernel streams
+reference tiles through VMEM and keeps only (Qb, top_k) running winners.
+
+We time both paths on the same dataset AND walk the traced jaxpr to report
+the largest intermediate each one materialises outside a Pallas kernel —
+structural evidence that the fused path never allocates the (Qb, Rk·max_r)
+score matrix, not just a wall-clock comparison (CPU interpret-mode timing of
+Pallas kernels is not representative of TPU; the memory story is exact).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.core import OMSConfig, OMSPipeline
+from repro.core import search as search_mod
+from repro.data.spectra import LibraryConfig, make_dataset
+
+
+def _iter_subjaxprs(params):
+    for v in params.values():
+        vals = v if isinstance(v, (tuple, list)) else (v,)
+        for u in vals:
+            if hasattr(u, "jaxpr"):        # ClosedJaxpr
+                yield u.jaxpr
+            elif hasattr(u, "eqns"):       # Jaxpr
+                yield u
+
+
+def _walk_shapes(closed_jaxpr):
+    """Yield (shape, dtype) of every eqn output, recursing into sub-jaxprs
+    but NOT into pallas_call bodies (whose tiles live in VMEM by
+    construction — that is the point of the fused kernel)."""
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                continue
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                shape = getattr(aval, "shape", None)
+                dtype = getattr(aval, "dtype", None)
+                if shape is not None and dtype is not None:
+                    yield shape, dtype
+            for sub in _iter_subjaxprs(eqn.params):
+                yield from walk(sub)
+
+    yield from walk(closed_jaxpr.jaxpr)
+
+
+def max_intermediate_bytes(closed_jaxpr) -> int:
+    return max((int(np.prod(s, dtype=np.int64)) * np.dtype(d).itemsize
+                for s, d in _walk_shapes(closed_jaxpr)), default=0)
+
+
+def materialises_score_matrix(closed_jaxpr, qb: int, rk: int) -> bool:
+    """True if any intermediate outside a Pallas kernel carries both the
+    q-block and the scanned-rows dimension — i.e. a (Qb, Rk[, W])-shaped
+    score/xor matrix. The streamed (Rk, W) reference slice itself does not
+    count: both paths must load the references."""
+    return any(len(s) >= 2 and qb in s and rk in s
+               for s, _ in _walk_shapes(closed_jaxpr))
+
+
+def main():
+    cfg = OMSConfig(dim=2048, max_r=1024, q_block=16, n_levels=16)
+    ds = make_dataset(LibraryConfig(n_refs=8192, n_queries=64, seed=7))
+    pipe = OMSPipeline(cfg, ds.refs)
+    hvs, qp, qc = pipe.encode_queries(ds.queries)
+    base = pipe.search_params(qp, qc)
+    rk = base.k_blocks * cfg.max_r
+    sims_bytes = cfg.q_block * rk * 4  # the (Qb, Rk) int32 score matrix
+
+    fused_has_matrix = None
+    for be in ("vpu", "fused"):
+        params = base._replace(backend=be)
+
+        def run():
+            return search_mod.oms_search(pipe.db, hvs, qp, qc, params,
+                                         dim=cfg.dim)
+
+        dt = timeit(run, warmup=1, iters=3)
+        jaxpr = jax.make_jaxpr(
+            lambda d, q, p, c: search_mod._search_sorted_padded(
+                d, q, p, c, params=params, dim=cfg.dim)
+        )(pipe.db, hvs, qp, qc)
+        peak = max_intermediate_bytes(jaxpr)
+        has_matrix = materialises_score_matrix(jaxpr, cfg.q_block, rk)
+        if be == "fused":
+            fused_has_matrix = has_matrix
+        emit(f"fused_vs_matrix/{be}", dt * 1e6,
+             f"score_matrix_materialised={'yes' if has_matrix else 'no'} "
+             f"max_intermediate={peak / 2**20:.2f}MiB "
+             f"(Qb,Rk)_sims_would_be={sims_bytes / 2**20:.2f}MiB rk={rk}")
+
+    if fused_has_matrix:
+        raise AssertionError("fused path materialised a (Qb, Rk) score "
+                             "matrix outside the kernel")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,7 @@ MODULES = [
     ("fig6a", "benchmarks.fig6a_qblock_scaling"),
     ("fig6e", "benchmarks.fig6e_threshold_sweep"),
     ("fig6cd", "benchmarks.fig6_data_movement"),
+    ("fusedvm", "benchmarks.fused_vs_matrix"),
     ("energy", "benchmarks.energy_model"),
     ("roofline", "benchmarks.roofline"),
 ]

@@ -37,7 +37,7 @@ def _run(tag, lib_cfg: LibraryConfig, oms_cfg: OMSConfig):
         jax.block_until_ready(out.result)
         dt = time.perf_counter() - t0
         src = np.asarray(ds.query_source)
-        recall = float((np.asarray(out.result.open_idx) == src).mean())
+        recall = float((np.asarray(out.result.open_idx[:, 0]) == src).mean())
         ids = int(out.open_fdr.n_accepted)
         red = f" comparisons_cut={stats['reduction']:.2f}x" \
             if mode == "blocked" else ""

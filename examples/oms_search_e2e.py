@@ -27,10 +27,20 @@ for batch_id in range(3):
     print(f"[serve] batch {batch_id}: {len(np.asarray(ds.query_source))} "
           f"queries in {dt:.2f}s, ids={int(out.open_fdr.n_accepted)}")
 
-# backend comparison: paper-faithful packed XOR+popcount vs beyond-paper MXU
-for backend in ("vpu", "mxu", "kernel_vpu", "kernel_mxu"):
+# backend comparison: paper-faithful packed XOR+popcount, beyond-paper MXU,
+# and the fused single-pass §II-C kernel (no (Q, R) score matrix)
+from repro.core import backends
+
+for backend in backends.names():
     t0 = time.perf_counter()
     out = pipe.search(ds.queries, backend=backend)
     jax.block_until_ready(out.result)
     print(f"[backend {backend:10s}] {time.perf_counter()-t0:.2f}s "
           f"(identical results; TPU perf differs — see EXPERIMENTS.md §Perf)")
+
+# top-k rescoring workload (ANN-SoLo-style): ranked candidate lists per query
+out = pipe.search(ds.queries, top_k=4, backend="fused")
+idx = np.asarray(out.result.open_idx)          # (Q, 4), rank 0 = best
+src = np.asarray(ds.query_source)
+print(f"[top-k] recall@1={np.mean(idx[:, 0] == src):.3f} "
+      f"recall@4={np.mean((idx == src[:, None]).any(1)):.3f}")

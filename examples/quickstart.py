@@ -22,8 +22,8 @@ out = pipe.search(dataset.queries)
 
 src = np.asarray(dataset.query_source)
 mod = np.asarray(dataset.query_modified)
-open_hit = np.asarray(out.result.open_idx) == src
-std_hit = np.asarray(out.result.std_idx) == src
+open_hit = np.asarray(out.result.open_idx[:, 0]) == src   # rank-0 of (Q, top_k)
+std_hit = np.asarray(out.result.std_idx[:, 0]) == src
 
 print(f"open-search recall:      {open_hit.mean():.3f}")
 print(f"  on modified spectra:   {open_hit[mod].mean():.3f}  <- the OMS win")

@@ -1,0 +1,109 @@
+"""Search-backend registry for the blocked OMS orchestrator.
+
+Two backend kinds exist, mirroring the two ways the paper's §II-C kernel can
+be realised:
+
+  * ``matrix`` — computes the full (Qb, Rk) Hamming-distance tile; the
+    orchestrator applies the precursor windows and the top-k reduction
+    outside the backend. Signature: ``fn(q_hvs, r_hvs, dim) -> (Qb, Rk)
+    int32 hamming``.
+  * ``fused`` — the paper-faithful path: consumes the PMZ/charge windows and
+    returns ranked running winners directly, never materialising the
+    (Qb, Rk) similarity matrix. Signature:
+    ``fn(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge, *, dim, ppm_tol,
+    open_tol_da, k) -> (std_sim, std_idx, open_sim, open_idx)``, each
+    (Qb, k) int32 with idx relative to the reference slice (or -1).
+
+Built-in backends:
+
+  name        kind    engine
+  ----------  ------  -----------------------------------------------------
+  vpu         matrix  packed XOR + lax.population_count (XLA, paper-faithful)
+  mxu         matrix  ±1 int8 matmul  (D - x·yᵀ)/2  (XLA, MXU formulation)
+  kernel_vpu  matrix  Pallas all-pairs Hamming tile kernel
+  kernel_mxu  matrix  Pallas MXU Hamming kernel
+  fused       fused   Pallas fused §II-C kernel (Hamming + dual windows +
+                      running top-k, one pass over the reference stream)
+  fused_xla   fused   XLA fallback of the fused reduction (still materialises
+                      the tile internally; for validation/debug)
+
+Register custom backends with :func:`register`; kernels are imported lazily
+inside the backend fn so importing this module stays cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core import packing
+
+MATRIX = "matrix"
+FUSED = "fused"
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    kind: str          # MATRIX | FUSED
+    fn: Callable
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register(name: str, kind: str, fn: Callable) -> Backend:
+    if kind not in (MATRIX, FUSED):
+        raise ValueError(f"backend kind must be {MATRIX!r} or {FUSED!r}, "
+                         f"got {kind!r}")
+    be = Backend(name=name, kind=kind, fn=fn)
+    _REGISTRY[name] = be
+    return be
+
+
+def get(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {', '.join(names())}"
+        ) from None
+
+
+def names(kind: str | None = None) -> tuple[str, ...]:
+    return tuple(n for n, b in _REGISTRY.items()
+                 if kind is None or b.kind == kind)
+
+
+# ---------------------------------------------------------------------------
+# Built-ins
+# ---------------------------------------------------------------------------
+
+
+def _kernel_vpu(q, r, dim):
+    from repro.kernels.hamming import ops as hops
+    return hops.hamming_matrix(q, r)
+
+
+def _kernel_mxu(q, r, dim):
+    from repro.kernels.hamming_mxu import ops as mops
+    return mops.hamming_matrix(q, r, dim)
+
+
+def _fused_pallas(q, r, qp, rp, qc, rc, *, dim, ppm_tol, open_tol_da, k):
+    from repro.kernels.hamming import ops as hops
+    return hops.fused_search(q, r, qp, rp, qc, rc, dim=dim, k=k,
+                             ppm_tol=ppm_tol, open_tol_da=open_tol_da)
+
+
+def _fused_xla(q, r, qp, rp, qc, rc, *, dim, ppm_tol, open_tol_da, k):
+    from repro.kernels.hamming import ref as href
+    return href.fused_search(q, r, qp, rp, qc, rc, dim=dim, k=k,
+                             ppm_tol=ppm_tol, open_tol_da=open_tol_da)
+
+
+register("vpu", MATRIX, lambda q, r, dim: packing.hamming_matrix_packed(q, r))
+register("mxu", MATRIX, lambda q, r, dim: packing.hamming_matrix_mxu(q, r, dim))
+register("kernel_vpu", MATRIX, _kernel_vpu)
+register("kernel_mxu", MATRIX, _kernel_mxu)
+register("fused", FUSED, _fused_pallas)
+register("fused_xla", FUSED, _fused_xla)

@@ -157,9 +157,16 @@ def candidate_block_stats(db: ReferenceDB, q_pmz: np.ndarray, q_charge: np.ndarr
     bmin = np.asarray(db.block_min); bmax = np.asarray(db.block_max)
     bch = np.asarray(db.block_charge)
     q_pmz = np.asarray(q_pmz); q_charge = np.asarray(q_charge)
+    # Vectorised over (query, block); chunked over queries so the boolean
+    # intermediate stays ~a few MiB at any Q.
+    n_blocks = len(bmin)
+    chunk = max(1, (1 << 22) // max(n_blocks, 1))
     total = 0
-    for qp, qc in zip(q_pmz, q_charge):
-        hit = (bch == qc) & (bmax >= qp - tol_da) & (bmin <= qp + tol_da)
+    for s in range(0, len(q_pmz), chunk):
+        qp = q_pmz[s:s + chunk, None]
+        qc = q_charge[s:s + chunk, None]
+        hit = ((bch[None, :] == qc) & (bmax[None, :] >= qp - tol_da)
+               & (bmin[None, :] <= qp + tol_da))
         total += int(hit.sum())
     return {
         "scanned_rows": total * db.max_r,

@@ -15,16 +15,25 @@ import jax.numpy as jnp
 
 
 class FDRResult(NamedTuple):
-    accept: jax.Array    # (Q,) bool — identified at the FDR threshold
-    q_values: jax.Array  # (Q,) f32 — per-match q-value (1.0 for no-match rows)
+    accept: jax.Array    # (Q,) / (Q, k) bool — identified at the FDR threshold
+    q_values: jax.Array  # (Q,) / (Q, k) f32 — per-match q-value (1.0 for no-match)
     n_accepted: jax.Array  # () i32
 
 
 @jax.jit
 def compute_q_values(scores: jax.Array, is_decoy: jax.Array,
                      valid: jax.Array) -> jax.Array:
-    """q-value per match. scores: (Q,) — higher is better."""
-    Q = scores.shape[0]
+    """q-value per match — higher score is better.
+
+    Accepts (Q,) best-1 matches or (Q, k) top-k match lists; for top-k the
+    target-decoy competition runs over the pooled (query, rank) matches and
+    the result keeps the input shape.
+    """
+    shape = scores.shape
+    scores = scores.reshape(-1)
+    is_decoy = is_decoy.reshape(-1)
+    valid = valid.reshape(-1)
+    n = scores.shape[0]
     # Invalid rows sink to the bottom of the ranking.
     neg_inf = jnp.finfo(jnp.float32).min
     s = jnp.where(valid, scores.astype(jnp.float32), neg_inf)
@@ -38,8 +47,8 @@ def compute_q_values(scores: jax.Array, is_decoy: jax.Array,
     fdr = jnp.minimum(cum_decoy / jnp.maximum(cum_target, 1.0), 1.0)
     # Monotonise: q_i = min_{j >= i} fdr_j  (suffix cummin via reversed cummin)
     q_sorted = jnp.flip(jax.lax.cummin(jnp.flip(fdr)))
-    q = jnp.zeros((Q,), jnp.float32).at[order].set(q_sorted)
-    return jnp.where(valid, q, 1.0)
+    q = jnp.zeros((n,), jnp.float32).at[order].set(q_sorted)
+    return jnp.where(valid, q, 1.0).reshape(shape)
 
 
 def fdr_filter(scores: jax.Array, is_decoy: jax.Array, valid: jax.Array,

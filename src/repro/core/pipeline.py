@@ -37,7 +37,8 @@ class OMSConfig:
     open_tol_da: float = 75.0    # open search window
     fdr_threshold: float = 0.01
     add_decoys: bool = True
-    backend: str = "vpu"
+    backend: str = "vpu"         # any name in repro.core.backends.names()
+    top_k: int = 1               # ranked winners per query and window
     seed: int = 0
 
     @property
@@ -106,23 +107,32 @@ class OMSPipeline:
         return hvs, pre.pmz, pre.charge
 
     def search_params(self, q_pmz, q_charge, *, exhaustive=False,
-                      open_tol_da=None, backend=None) -> SearchParams:
+                      open_tol_da=None, backend=None,
+                      top_k=None) -> SearchParams:
         tol = self.cfg.open_tol_da if open_tol_da is None else open_tol_da
         k = plan_search(self.db, np.asarray(q_pmz), np.asarray(q_charge),
                         open_tol_da=tol, q_block=self.cfg.q_block)
         return SearchParams(
             ppm_tol=self.cfg.ppm_tol, open_tol_da=tol,
             q_block=self.cfg.q_block, k_blocks=k,
-            backend=backend or self.cfg.backend, exhaustive=exhaustive)
+            backend=backend or self.cfg.backend, exhaustive=exhaustive,
+            top_k=self.cfg.top_k if top_k is None else top_k)
 
     def search(self, queries: SpectraSet, *, exhaustive: bool = False,
                open_tol_da: float | None = None,
-               backend: str | None = None) -> OMSOutput:
+               backend: str | None = None,
+               top_k: int | None = None) -> OMSOutput:
         hvs, q_pmz, q_charge = self.encode_queries(queries)
-        params = self.search_params(q_pmz, q_charge, exhaustive=exhaustive,
-                                    open_tol_da=open_tol_da, backend=backend)
+        # One host conversion, shared by plan_search and the padding plan —
+        # oms_search itself never syncs device->host.
+        qp_np = np.asarray(q_pmz)
+        qc_np = np.asarray(q_charge)
+        params = self.search_params(qp_np, qc_np, exhaustive=exhaustive,
+                                    open_tol_da=open_tol_da, backend=backend,
+                                    top_k=top_k)
         result = oms_search(self.db, hvs, q_pmz, q_charge, params,
-                            dim=self.cfg.dim)
+                            dim=self.cfg.dim, q_pmz_np=qp_np,
+                            q_charge_np=qc_np)
 
         def _fdr(row, sim):
             valid = row >= 0

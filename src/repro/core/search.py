@@ -7,9 +7,23 @@ Semantics (paper-faithful):
     precursor window (standard 20 ppm / open ±tol Da).
   * Per (query, reference) pair the score is Hamming similarity
     ``sim = Dhv - hamming`` on binary HVs; a fused ``find_max_score`` keeps
-    TWO running winners per query — one under the standard-search ppm window
-    and one under the open-search Da window — exactly the two result sets the
-    paper's kernel emits.
+    TWO ranked winner lists per query — one under the standard-search ppm
+    window and one under the open-search Da window — exactly the two result
+    sets the paper's kernel emits, generalised to top-k.
+
+Backends: dispatch goes through the registry in :mod:`repro.core.backends`.
+``matrix`` backends (vpu / mxu / kernel_vpu / kernel_mxu) return the (Qb, Rk)
+Hamming tile and the orchestrator reduces it here; ``fused`` backends (the
+Pallas §II-C kernel and its XLA fallback) consume the PMZ/charge windows and
+return ranked running winners directly, never materialising the (Qb, Rk)
+similarity matrix — the paper's single-pass streaming kernel.
+
+Top-k: ``SearchParams.top_k`` (static, default 1) selects how many winners
+per query and window are kept. All :class:`SearchResult` arrays are
+(Q, top_k)-shaped, ranked by (similarity desc, library row asc) — ties
+resolve to the first global maximum, so rank 0 at ``top_k=1`` is bit-exact
+with the historical best-1 search. Ranks past the number of in-window
+candidates report idx/sim = -1.
 
 JIT strategy: queries and references are both PMZ-sorted (per charge), so a
 query block's candidate references are a *contiguous* run of blocks. We
@@ -18,10 +32,16 @@ query block's candidate references are a *contiguous* run of blocks. We
 orchestrator (`plan_search`) from the DB's PMZ density — the analogue of the
 paper's DRAM-level block planning. Exhaustive mode (= the HyperOMS baseline)
 is the same loop with ``start = 0`` and ``k_blocks = n_blocks``.
+
+The host-side query padding plan (charge groups padded to ``q_block``)
+depends only on (q_block, per-charge counts), so it is memoized — repeated
+serving batches with the same charge histogram skip the host round-trip
+entirely; callers that already hold numpy pmz/charge can pass them via
+``q_pmz_np``/``q_charge_np`` to avoid any device sync.
 """
 from __future__ import annotations
 
-import dataclasses
+import functools
 from functools import partial
 from typing import NamedTuple
 
@@ -29,8 +49,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import packing
+from repro.core import backends as backends_mod
 from repro.core.blocking import PAD_PMZ, ReferenceDB
+from repro.kernels.topk import select_topk as _select_topk
 
 # Charge multiplier for building monotonic (charge, pmz) sort keys. PMZ values
 # are clipped below this, so keys from different charges never interleave.
@@ -44,64 +65,52 @@ class SearchParams(NamedTuple):
     q_block: int = 16              # queries per kernel iteration (paper Q_BLOCK)
     k_blocks: int = 8              # static cap of ref blocks scanned per q-block
     min_sim: int = 0               # matches below this similarity report idx=-1
-    backend: str = "vpu"           # 'vpu' | 'mxu' | 'kernel_vpu' | 'kernel_mxu'
+    backend: str = "vpu"           # any name in repro.core.backends.names()
     exhaustive: bool = False       # True = HyperOMS-style full scan (baseline)
+    top_k: int = 1                 # ranked winners kept per query and window
 
 
 class SearchResult(NamedTuple):
-    """Per query: best standard-window and best open-window match."""
+    """Per query: top-k standard-window and top-k open-window matches.
 
-    std_idx: jax.Array     # (Q,) i32 — original library index, -1 if none
-    std_sim: jax.Array     # (Q,) i32 — Hamming similarity (Dhv - distance)
-    open_idx: jax.Array    # (Q,) i32
-    open_sim: jax.Array    # (Q,) i32
-    std_row: jax.Array     # (Q,) i32 — row in the sorted/padded DB (for decoy lookup)
-    open_row: jax.Array    # (Q,) i32
+    All arrays are (Q, top_k) int32, ranked by (sim desc, row asc); empty
+    ranks are -1.
+    """
 
-
-# ---------------------------------------------------------------------------
-# Hamming backends
-# ---------------------------------------------------------------------------
-
-
-def _hamming(q: jax.Array, r: jax.Array, dim: int, backend: str) -> jax.Array:
-    """(Qb, W) x (Rk, W) -> (Qb, Rk) int32 Hamming distance."""
-    if backend == "vpu":
-        return packing.hamming_matrix_packed(q, r)
-    if backend == "mxu":
-        return packing.hamming_matrix_mxu(q, r, dim)
-    if backend == "kernel_vpu":
-        from repro.kernels.hamming import ops as hops
-        return hops.hamming_matrix(q, r)
-    if backend == "kernel_mxu":
-        from repro.kernels.hamming_mxu import ops as mops
-        return mops.hamming_matrix(q, r, dim)
-    raise ValueError(f"unknown backend {backend!r}")
+    std_idx: jax.Array     # (Q, k) — original library index, -1 if none
+    std_sim: jax.Array     # (Q, k) — Hamming similarity (Dhv - distance)
+    open_idx: jax.Array    # (Q, k)
+    open_sim: jax.Array    # (Q, k)
+    std_row: jax.Array     # (Q, k) — row in the sorted/padded DB (decoy lookup)
+    open_row: jax.Array    # (Q, k)
 
 
 # ---------------------------------------------------------------------------
-# Core blocked search
+# Top-k reduction (matrix backends) — selection itself lives in
+# repro.kernels.topk, shared bit-exactly with the fused Pallas kernel.
 # ---------------------------------------------------------------------------
 
 
-def _find_max_dual(sims, dpmz, q_pmz, q_charge, r_charge, r_pmz, p: SearchParams):
-    """Fused dual-window find_max_score over one (Qb, Rk) tile.
+def _find_topk_dual(sims, dpmz, q_pmz, q_charge, r_charge, r_pmz,
+                    p: SearchParams):
+    """Dual-window top-k find_max_score over one (Qb, Rk) tile.
 
-    Returns per-query (std_sim, std_arg, open_sim, open_arg) with arg = column
-    in the tile or -1.
+    Returns per-query (std_sim, std_arg, open_sim, open_arg), each
+    (Qb, top_k) with arg = column in the tile or -1.
     """
     valid = (r_pmz[None, :] < PAD_PMZ) & (q_charge[:, None] == r_charge[None, :])
     std_mask = valid & (dpmz <= q_pmz[:, None] * (p.ppm_tol * 1e-6))
     open_mask = valid & (dpmz <= p.open_tol_da)
 
     neg = jnp.int32(-1)
-    std_s = jnp.where(std_mask, sims, neg)
-    open_s = jnp.where(open_mask, sims, neg)
-    std_arg = jnp.argmax(std_s, axis=1).astype(jnp.int32)
-    open_arg = jnp.argmax(open_s, axis=1).astype(jnp.int32)
-    std_best = jnp.take_along_axis(std_s, std_arg[:, None], axis=1)[:, 0]
-    open_best = jnp.take_along_axis(open_s, open_arg[:, None], axis=1)[:, 0]
-    return std_best, std_arg, open_best, open_arg
+    std_s, std_a = _select_topk(jnp.where(std_mask, sims, neg), p.top_k)
+    open_s, open_a = _select_topk(jnp.where(open_mask, sims, neg), p.top_k)
+    return std_s, std_a, open_s, open_a
+
+
+# ---------------------------------------------------------------------------
+# Core blocked search
+# ---------------------------------------------------------------------------
 
 
 def _block_body(db: ReferenceDB, dim: int, p: SearchParams,
@@ -112,11 +121,17 @@ def _block_body(db: ReferenceDB, dim: int, p: SearchParams,
     r_pmz = jax.lax.dynamic_slice(db.pmz, (start_row,), (rk,))
     r_charge = jax.lax.dynamic_slice(db.charge, (start_row,), (rk,))
 
-    ham = _hamming(q_hvs, r_hvs, dim, p.backend)
-    sims = dim - ham
-    dpmz = jnp.abs(q_pmz[:, None] - r_pmz[None, :])
-    std_b, std_a, open_b, open_a = _find_max_dual(
-        sims, dpmz, q_pmz, q_charge, r_charge, r_pmz, p)
+    be = backends_mod.get(p.backend)
+    if be.kind == backends_mod.FUSED:
+        std_b, std_a, open_b, open_a = be.fn(
+            q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge, dim=dim,
+            ppm_tol=p.ppm_tol, open_tol_da=p.open_tol_da, k=p.top_k)
+    else:
+        ham = be.fn(q_hvs, r_hvs, dim)
+        sims = dim - ham
+        dpmz = jnp.abs(q_pmz[:, None] - r_pmz[None, :])
+        std_b, std_a, open_b, open_a = _find_topk_dual(
+            sims, dpmz, q_pmz, q_charge, r_charge, r_pmz, p)
 
     std_row = jnp.where(std_b >= 0, start_row + std_a, -1)
     open_row = jnp.where(open_b >= 0, start_row + open_a, -1)
@@ -126,8 +141,13 @@ def _block_body(db: ReferenceDB, dim: int, p: SearchParams,
 @partial(jax.jit, static_argnames=("params", "dim"))
 def _search_sorted_padded(db: ReferenceDB, q_hvs, q_pmz, q_charge,
                           *, params: SearchParams, dim: int):
-    """Search with queries already (charge, pmz)-sorted and padded to q_block."""
+    """Search with queries already (charge, pmz)-sorted and padded to q_block.
+
+    Returns four (Qp, top_k) arrays: std_sim, std_row, open_sim, open_row.
+    """
     p = params
+    if p.top_k < 1:
+        raise ValueError(f"top_k must be >= 1, got {p.top_k}")
     QB = p.q_block
     nqb = q_hvs.shape[0] // QB
 
@@ -155,37 +175,68 @@ def _search_sorted_padded(db: ReferenceDB, q_hvs, q_pmz, q_charge,
 
     qs = (q_hvs.reshape(nqb, QB, -1), q_pmz.reshape(nqb, QB), q_charge.reshape(nqb, QB))
     std_b, std_row, open_b, open_row = jax.lax.map(one_qblock, qs)
-    return (std_b.reshape(-1), std_row.reshape(-1),
-            open_b.reshape(-1), open_row.reshape(-1))
+    K = p.top_k
+    return (std_b.reshape(-1, K), std_row.reshape(-1, K),
+            open_b.reshape(-1, K), open_row.reshape(-1, K))
+
+
+# ---------------------------------------------------------------------------
+# Host-side query padding plan (memoized)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=512)
+def _padding_plan(q_block: int, group_sizes: tuple[int, ...]):
+    """Row-selection plan for (charge, pmz)-sorted queries.
+
+    Pads each charge group to a ``q_block`` multiple (repeating the last,
+    highest-pmz row so the padded block stays in one PMZ neighbourhood) so no
+    query block straddles a charge boundary. Depends only on the per-charge
+    counts, hence the memoization: repeated serving batches with the same
+    charge histogram reuse the plan with zero host work.
+    """
+    sel_rows, is_real = [], []
+    start = 0
+    for n in group_sizes:
+        g = list(range(start, start + n))
+        sel_rows.extend(g)
+        is_real.extend([True] * n)
+        padn = (-n) % q_block
+        sel_rows.extend([g[-1]] * padn)
+        is_real.extend([False] * padn)
+        start += n
+    sel = np.asarray(sel_rows, dtype=np.int32)
+    real = np.asarray(is_real, dtype=bool)
+    sel.setflags(write=False)
+    real.setflags(write=False)
+    return sel, real
 
 
 def oms_search(db: ReferenceDB, q_hvs: jax.Array, q_pmz: jax.Array,
-               q_charge: jax.Array, params: SearchParams, *, dim: int) -> SearchResult:
+               q_charge: jax.Array, params: SearchParams, *, dim: int,
+               q_pmz_np: np.ndarray | None = None,
+               q_charge_np: np.ndarray | None = None) -> SearchResult:
     """Full OMS search: sort queries, run the blocked scan, unsort, map rows
     back to original library indices, apply the min-similarity threshold.
+
+    ``q_pmz_np``/``q_charge_np`` are optional host copies of the query
+    precursor arrays; pass them (the pipeline does) to avoid a device->host
+    sync when the padding plan is already cached.
     """
     Q = q_hvs.shape[0]
     QB = params.q_block
 
     # Sort queries by (charge, pmz); pad each charge group to a q_block
-    # multiple so no query block straddles a charge boundary.
+    # multiple so no query block straddles a charge boundary. The plan needs
+    # only the per-charge counts (np.unique is ascending, matching the device
+    # sort key), so it is cached across calls.
     key = jnp.clip(q_pmz, 0.0, _CHARGE_KEY - 1.0) + q_charge * _CHARGE_KEY
     order = jnp.argsort(key)
-    # Host-side padding plan (per sorted charge runs).
-    qc_sorted = np.asarray(jax.device_get(q_charge))[np.asarray(jax.device_get(order))]
-    boundaries = np.flatnonzero(np.diff(qc_sorted)) + 1
-    groups = np.split(np.arange(Q), boundaries)
-    sel_rows, is_real = [], []
-    for g in groups:
-        sel_rows.extend(g.tolist())
-        is_real.extend([True] * len(g))
-        padn = (-len(g)) % QB
-        sel_rows.extend([g[-1]] * padn)         # repeat the last (highest-pmz)
-        #                                         row so the padded block stays
-        #                                         in one PMZ neighbourhood
-        is_real.extend([False] * padn)
-    sel = jnp.asarray(np.array(sel_rows, dtype=np.int32).reshape(-1))
-    real = jnp.asarray(np.array(is_real, dtype=bool))
+    qc_np = np.asarray(q_charge if q_charge_np is None else q_charge_np)
+    counts = np.unique(qc_np, return_counts=True)[1]
+    sel_np, real_np = _padding_plan(QB, tuple(int(c) for c in counts))
+    sel = jnp.asarray(sel_np)
+    real = jnp.asarray(real_np)
 
     qh = q_hvs[order][sel]
     qp = q_pmz[order][sel]

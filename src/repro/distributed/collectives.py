@@ -26,15 +26,25 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.blocking import ReferenceDB, shard_reference_db
 from repro.core.search import SearchParams, _search_sorted_padded
+from repro.kernels.topk import select_topk as _select_topk
 
 
-def _merge_best(sim, row, axis_name):
-    """Combine per-shard winners: max sim, first-shard tie-break."""
-    sims = jax.lax.all_gather(sim, axis_name)    # (S, Q)
+def _merge_best(sim, row, axis_name, k: int):
+    """Combine per-shard (Q, k) ranked winners into global (Q, k).
+
+    Shards are gathered in ascending-offset order and each shard's list is
+    already (sim desc, row asc), so the running-argmax selection keeps the
+    global first-maximum tie-break; at k=1 this is the historical
+    max-sim/first-shard merge. ICI traffic is 8*k bytes/query/shard.
+    """
+    sims = jax.lax.all_gather(sim, axis_name)    # (S, Q, k)
     rows = jax.lax.all_gather(row, axis_name)
-    best = jnp.argmax(sims, axis=0)              # first max wins
-    q = jnp.arange(sim.shape[0])
-    return sims[best, q], rows[best, q]
+    S, Q = sims.shape[0], sims.shape[1]
+    sims = jnp.moveaxis(sims, 0, 1).reshape(Q, S * k)
+    rows = jnp.moveaxis(rows, 0, 1).reshape(Q, S * k)
+    best, arg = _select_topk(sims, k)            # (Q, k) sims + columns
+    r = jnp.take_along_axis(rows, jnp.clip(arg, 0, S * k - 1), axis=1)
+    return best, jnp.where(arg >= 0, r, -1)
 
 
 def sharded_search(db: ReferenceDB, q_hvs, q_pmz, q_charge,
@@ -72,8 +82,8 @@ def sharded_search(db: ReferenceDB, q_hvs, q_pmz, q_charge,
         offset = shard.astype(jnp.int32) * rows_per_shard
         std_row = jnp.where(std_row >= 0, std_row + offset, std_row)
         open_row = jnp.where(open_row >= 0, open_row + offset, open_row)
-        std_b, std_row = _merge_best(std_b, std_row, model_axis)
-        open_b, open_row = _merge_best(open_b, open_row, model_axis)
+        std_b, std_row = _merge_best(std_b, std_row, model_axis, params.top_k)
+        open_b, open_row = _merge_best(open_b, open_row, model_axis, params.top_k)
         return std_b, std_row, open_b, open_row
 
     fn = shard_map(

@@ -15,8 +15,16 @@ Two kernels:
   * ``hamming_matrix_kernel`` — all-pairs Hamming tile (building block,
     validated against the oracle over shape/dtype sweeps);
   * ``fused_search_kernel`` — the full paper kernel: Hamming + PMZ windows +
-    dual running winners, one pass over the reference stream, no (Q, R)
-    score matrix ever materialised in HBM.
+    dual running *top-k* winners (k static, default 1), one pass over the
+    reference stream, no (Q, R) score matrix ever materialised in HBM.
+
+Top-k semantics: per query and per window, the k highest-similarity
+references ranked by (similarity desc, reference row asc) — i.e. the first
+global maximum wins ties, matching ``jnp.argmax`` at k=1 bit-exactly.
+Selection is an unrolled k-step running-argmax merge (no ``lax.top_k``
+inside the kernel, so the same code lowers on Mosaic and interpret mode),
+shared with the orchestrator and the sharded merge via
+:mod:`repro.kernels.topk`.
 
 Grid iteration order on TPU is sequential over the last grid axis, so the
 running-winner accumulation across reference blocks is race-free by
@@ -29,6 +37,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.topk import merge_topk, select_topk
 
 
 
@@ -91,7 +101,7 @@ def hamming_matrix_pallas(q: jax.Array, r: jax.Array, *, q_tile: int = 16,
 
 def fused_search_kernel(q_ref, r_ref, qp_ref, rp_ref, qc_ref, rc_ref,
                         std_sim_ref, std_idx_ref, open_sim_ref, open_idx_ref,
-                        *, dim: int, wt: int, r_tile: int,
+                        *, dim: int, wt: int, r_tile: int, k: int,
                         ppm_tol: float, open_tol_da: float, pad_pmz: float):
     j = pl.program_id(1)
 
@@ -121,28 +131,27 @@ def fused_search_kernel(q_ref, r_ref, qp_ref, rp_ref, qc_ref, rc_ref,
     base = (j * r_tile).astype(jnp.int32)
 
     def update(mask, sim_out, idx_out):
-        s = jnp.where(mask, sims, jnp.int32(-1))
-        arg = jnp.argmax(s, axis=1).astype(jnp.int32)
-        best = jnp.take_along_axis(s, arg[:, None], axis=1)[:, 0]
-        cur = sim_out[...]
-        better = best > cur                             # strict >: keeps the
-        sim_out[...] = jnp.where(better, best, cur)     # first global maximum,
-        idx_out[...] = jnp.where(better, base + arg,    # matching the oracle
-                                 idx_out[...])
+        ts, tc = select_topk(jnp.where(mask, sims, jnp.int32(-1)), k)
+        ti = jnp.where(tc >= 0, base + tc, jnp.int32(-1))
+        # running winners first: earlier blocks (lower idx) win sim ties
+        ms, mi = merge_topk(sim_out[...], idx_out[...], ts, ti, k)
+        sim_out[...] = ms
+        idx_out[...] = mi
 
     update(std_mask, std_sim_ref, std_idx_ref)
     update(open_mask, open_sim_ref, open_idx_ref)
 
 
 def fused_search_pallas(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge, *,
-                        dim: int, ppm_tol: float = 20.0,
+                        dim: int, k: int = 1, ppm_tol: float = 20.0,
                         open_tol_da: float = 75.0,
                         q_tile: int = 16, r_tile: int = 256,
                         word_tile: int = 16, pad_pmz: float | None = None,
                         interpret: bool = True):
-    """Returns (std_sim, std_idx, open_sim, open_idx), each (Q,) int32.
+    """Returns (std_sim, std_idx, open_sim, open_idx), each (Q, k) int32.
 
-    idx is the row in ``r_hvs`` (or -1); sim = dim - hamming (or -1).
+    idx is the row in ``r_hvs`` (or -1); sim = dim - hamming (or -1); rank
+    order is (sim desc, row asc). ``k`` is static.
     """
     Q, W = q_hvs.shape
     R = r_hvs.shape[0]
@@ -151,11 +160,11 @@ def fused_search_pallas(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge, *,
     grid = (Q // q_tile, R // r_tile)
 
     kern = functools.partial(
-        fused_search_kernel, dim=dim, wt=word_tile, r_tile=r_tile,
+        fused_search_kernel, dim=dim, wt=word_tile, r_tile=r_tile, k=k,
         ppm_tol=ppm_tol, open_tol_da=open_tol_da, pad_pmz=pad_pmz)
 
-    out1d = pl.BlockSpec((q_tile,), lambda i, j: (i,))
-    shapes = [jax.ShapeDtypeStruct((Q,), jnp.int32)] * 4
+    out2d = pl.BlockSpec((q_tile, k), lambda i, j: (i, 0))
+    shapes = [jax.ShapeDtypeStruct((Q, k), jnp.int32)] * 4
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -167,7 +176,7 @@ def fused_search_pallas(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge, *,
             pl.BlockSpec((q_tile,), lambda i, j: (i,)),
             pl.BlockSpec((r_tile,), lambda i, j: (j,)),
         ],
-        out_specs=[out1d, out1d, out1d, out1d],
+        out_specs=[out2d, out2d, out2d, out2d],
         out_shape=shapes,
         interpret=interpret,
     )(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge)

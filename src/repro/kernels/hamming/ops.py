@@ -41,12 +41,14 @@ def hamming_matrix(q, r, *, q_tile: int = 16, r_tile: int = 256,
     return out[:Q, :R]
 
 
-@partial(jax.jit, static_argnames=("dim", "ppm_tol", "open_tol_da", "q_tile",
-                                   "r_tile", "word_tile", "interpret"))
+@partial(jax.jit, static_argnames=("dim", "k", "ppm_tol", "open_tol_da",
+                                   "q_tile", "r_tile", "word_tile",
+                                   "interpret"))
 def fused_search(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge, *, dim: int,
-                 ppm_tol: float = 20.0, open_tol_da: float = 75.0,
+                 k: int = 1, ppm_tol: float = 20.0, open_tol_da: float = 75.0,
                  q_tile: int = 16, r_tile: int = 256, word_tile: int = 16,
                  interpret: bool | None = None):
+    """Fused dual-window top-k search; returns four (Q, k) int32 arrays."""
     if interpret is None:
         interpret = _interpret_default()
     Q = q_hvs.shape[0]
@@ -64,7 +66,7 @@ def fused_search(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge, *, dim: int,
     rc = _pad_rows(r_charge, rt, value=-1)
 
     std_sim, std_idx, open_sim, open_idx = _k.fused_search_pallas(
-        qh, rh, qp, rp, qc, rc, dim=dim, ppm_tol=ppm_tol,
+        qh, rh, qp, rp, qc, rc, dim=dim, k=k, ppm_tol=ppm_tol,
         open_tol_da=open_tol_da, q_tile=q_tile, r_tile=rt,
         word_tile=wt, pad_pmz=PAD_PMZ, interpret=interpret)
     return std_sim[:Q], std_idx[:Q], open_sim[:Q], open_idx[:Q]

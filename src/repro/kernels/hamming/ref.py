@@ -1,6 +1,7 @@
 """Pure-jnp oracle for the hamming kernels."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.packing import hamming_matrix_packed
@@ -12,9 +13,14 @@ def hamming_matrix(q, r):
 
 
 def fused_search(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge, *,
-                 dim: int, ppm_tol: float = 20.0, open_tol_da: float = 75.0,
-                 pad_pmz: float | None = None):
-    """Oracle for the fused dual-window search kernel."""
+                 dim: int, k: int = 1, ppm_tol: float = 20.0,
+                 open_tol_da: float = 75.0, pad_pmz: float | None = None):
+    """XLA-fallback / oracle for the fused dual-window top-k search kernel.
+
+    Materialises the full (Q, R) similarity matrix and reduces with
+    ``lax.top_k`` (ties resolve to the lower index, matching the kernel's
+    running-argmax merge). Returns four (Q, k) int32 arrays.
+    """
     if pad_pmz is None:
         pad_pmz = float(jnp.finfo(jnp.float32).max)
     sims = dim - hamming_matrix_packed(q_hvs, r_hvs)
@@ -24,9 +30,8 @@ def fused_search(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge, *,
 
     def best(mask):
         s = jnp.where(mask, sims, neg)
-        arg = jnp.argmax(s, axis=1).astype(jnp.int32)
-        b = jnp.take_along_axis(s, arg[:, None], axis=1)[:, 0]
-        return b, jnp.where(b > neg, arg, neg)
+        b, arg = jax.lax.top_k(s, k)
+        return b, jnp.where(b > neg, arg.astype(jnp.int32), neg)
 
     std_mask = valid & (dpmz <= q_pmz[:, None] * (ppm_tol * 1e-6))
     open_mask = valid & (dpmz <= open_tol_da)

@@ -1,0 +1,52 @@
+"""Running-argmax top-k selection — the single source of truth for the
+winner-ranking contract shared by the fused Pallas kernel, the matrix-backend
+orchestrator reduction (core/search.py), and the sharded winner merge
+(distributed/collectives.py).
+
+Contract: candidates ranked by (similarity desc, column asc) — ties resolve
+to the first global maximum, bit-exact with ``jnp.argmax`` at k=1; ranks past
+the valid candidates report -1. Invalid inputs are marked -1; consumed
+entries are sunk to -2 so they are never re-selected, and outputs are clamped
+back to -1.
+
+Plain jnp ops only (unrolled static-k loop, no ``lax.top_k``), so the same
+code traces inside a Pallas kernel body, under Mosaic, and under XLA. The
+``lax.top_k`` path in kernels/hamming/ref.py is intentionally NOT routed
+through this helper — it is the independent oracle the tests cross-check
+against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def select_topk(s, k: int):
+    """s: (Q, C) int32 masked sims, -1 = invalid.
+
+    Returns ((Q, k) sims, (Q, k) column or -1) under the contract above.
+    """
+    sims_out, col_out = [], []
+    for _ in range(k):
+        arg = jnp.argmax(s, axis=1).astype(jnp.int32)
+        best = jnp.take_along_axis(s, arg[:, None], axis=1)[:, 0]
+        best = jnp.maximum(best, jnp.int32(-1))
+        sims_out.append(best)
+        col_out.append(jnp.where(best >= 0, arg, jnp.int32(-1)))
+        hot = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) == arg[:, None]
+        s = jnp.where(hot, jnp.int32(-2), s)
+    return jnp.stack(sims_out, axis=1), jnp.stack(col_out, axis=1)
+
+
+def merge_topk(sim_a, idx_a, sim_b, idx_b, k: int):
+    """Merge two (Q, k) ranked winner lists (sim, payload-idx) into one.
+
+    ``a`` must hold the earlier (lower-index) candidates: on sim ties the
+    first occurrence wins, so earlier candidates keep winning.
+    """
+    sims = jnp.concatenate([sim_a, sim_b], axis=1)
+    idxs = jnp.concatenate([idx_a, idx_b], axis=1)
+    best, col = select_topk(sims, k)
+    picked = jnp.take_along_axis(idxs, jnp.clip(col, 0, idxs.shape[1] - 1),
+                                 axis=1)
+    return best, jnp.where(col >= 0, picked, jnp.int32(-1))

@@ -1,0 +1,89 @@
+"""`hypothesis` import indirection for the tier-1 suite.
+
+When the real package is installed (the `dev` extra in pyproject.toml) we
+re-export it untouched and property tests run with full random shrinking.
+On a bare interpreter we fall back to a tiny deterministic harness that
+drives each `@given` test with a few fixed examples (bounds + seeded
+pseudo-random draws), so `PYTHONPATH=src python -m pytest -x -q` stays green
+without any third-party test dependencies.
+
+The fallback implements exactly the subset this repo's tests use:
+  * ``given(*strategies)``
+  * ``settings(max_examples=..., deadline=...)`` (max_examples is honoured,
+    capped at ``_MAX_FALLBACK_EXAMPLES``; everything else is ignored)
+  * ``strategies.integers(lo, hi)``, ``strategies.floats(lo, hi)``,
+    ``strategies.sampled_from(seq)``
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised when hypothesis is installed
+    from hypothesis import given, settings, strategies
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _MAX_FALLBACK_EXAMPLES = 3
+    _SEED = 0xC0FFEE
+
+    class _Strategy:
+        """Deterministic stand-in: bounds first, then seeded random draws."""
+
+        def __init__(self, edges, draw):
+            self._edges = list(edges)
+            self._draw = draw
+
+        def examples(self, rng, n):
+            out = list(self._edges[:n])
+            while len(out) < n:
+                out.append(self._draw(rng))
+            return out
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                (min_value, max_value),
+                lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                (min_value, max_value),
+                lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(
+                (seq[0], seq[-1]),
+                lambda rng: rng.choice(seq))
+
+    strategies = _Strategies()
+
+    def settings(max_examples=None, deadline=None, **_kw):
+        def decorate(f):
+            f._fallback_max_examples = max_examples
+            return f
+        return decorate
+
+    def given(*strats):
+        def decorate(f):
+            n = getattr(f, "_fallback_max_examples", None) or _MAX_FALLBACK_EXAMPLES
+            n = min(n, _MAX_FALLBACK_EXAMPLES)
+
+            def wrapper():
+                rng = random.Random(_SEED)
+                draws = [s.examples(rng, n) for s in strats]
+                for combo in zip(*draws):
+                    f(*combo)
+
+            # No functools.wraps: pytest must see a zero-arg signature, not
+            # the wrapped test's strategy parameters (it would treat them as
+            # fixtures).
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            wrapper.hypothesis_fallback = True
+            return wrapper
+        return decorate

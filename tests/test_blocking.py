@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.blocking import (PAD_PMZ, build_reference_db,
                                  candidate_block_stats, shard_reference_db)

@@ -1,7 +1,7 @@
 """Target-decoy FDR filter."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.fdr import compute_q_values, fdr_filter
 

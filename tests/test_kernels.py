@@ -56,7 +56,10 @@ def test_hamming_kernel_tiling_invariance(q_tile, r_tile, word_tile):
 
 
 @pytest.mark.parametrize("Q,R,W", [(8, 64, 4), (30, 260, 8)])
-def test_fused_search_kernel_sweep(Q, R, W):
+@pytest.mark.parametrize("k", [1, 3])
+def test_fused_search_kernel_sweep(Q, R, W, k):
+    """Pallas running-argmax top-k vs the lax.top_k XLA oracle — two
+    independent reductions must agree exactly, including tie order."""
     key = jax.random.PRNGKey(Q)
     ks = jax.random.split(key, 4)
     q, r = _rand_packed(ks[0], Q, W), _rand_packed(ks[1], R, W)
@@ -64,9 +67,10 @@ def test_fused_search_kernel_sweep(Q, R, W):
     rp = jax.random.uniform(ks[3], (R,), minval=400, maxval=1800)
     qc = jnp.where(jnp.arange(Q) % 2 == 0, 2, 3).astype(jnp.int32)
     rc = jnp.where(jnp.arange(R) % 3 == 0, 3, 2).astype(jnp.int32)
-    o = href.fused_search(q, r, qp, rp, qc, rc, dim=W * 32)
-    g = hops.fused_search(q, r, qp, rp, qc, rc, dim=W * 32)
+    o = href.fused_search(q, r, qp, rp, qc, rc, dim=W * 32, k=k)
+    g = hops.fused_search(q, r, qp, rp, qc, rc, dim=W * 32, k=k)
     for name, a, b in zip(("std_sim", "std_idx", "open_sim", "open_idx"), o, g):
+        assert a.shape == (Q, k), name
         assert (np.asarray(a) == np.asarray(b)).all(), name
 
 

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import OMSConfig, OMSPipeline
 from repro.data.spectra import LibraryConfig, make_dataset
@@ -27,9 +27,10 @@ def test_blocked_equals_exhaustive(seed):
 
 
 def test_backends_agree():
+    from repro.core import backends
     pipe, ds = _pipe(1)
     ref = pipe.search(ds.queries).result
-    for be in ("mxu", "kernel_vpu", "kernel_mxu"):
+    for be in backends.names():
         got = pipe.search(ds.queries, backend=be).result
         for f in ("std_idx", "std_sim", "open_idx", "open_sim"):
             assert (np.asarray(getattr(got, f))
@@ -41,7 +42,7 @@ def test_windows_nested():
     or be beaten by a better (wider-window) one."""
     pipe, ds = _pipe(2)
     r = pipe.search(ds.queries).result
-    std_sim = np.asarray(r.std_sim); open_sim = np.asarray(r.open_sim)
+    std_sim = np.asarray(r.std_sim[:, 0]); open_sim = np.asarray(r.open_sim[:, 0])
     has_std = std_sim >= 0
     assert (open_sim[has_std] >= std_sim[has_std]).all()
 
@@ -50,7 +51,7 @@ def test_charge_respected():
     pipe, ds = _pipe(3)
     r = pipe.search(ds.queries).result
     qc = np.asarray(ds.queries.charge)
-    rows = np.asarray(r.open_row)
+    rows = np.asarray(r.open_row[:, 0])
     dbc = np.asarray(pipe.db.charge)
     ok = rows >= 0
     assert (dbc[rows[ok]] == qc[ok]).all()
@@ -60,7 +61,7 @@ def test_open_window_respected():
     pipe, ds = _pipe(4)
     r = pipe.search(ds.queries).result
     qp = np.asarray(ds.queries.pmz)
-    rows = np.asarray(r.open_row)
+    rows = np.asarray(r.open_row[:, 0])
     dbp = np.asarray(pipe.db.pmz)
     ok = rows >= 0
     assert (np.abs(dbp[rows[ok]] - qp[ok]) <= CFG.open_tol_da + 1e-3).all()

@@ -31,8 +31,8 @@ def test_open_search_finds_modifications(setup):
     ds, pipe, out = setup
     src = np.asarray(ds.query_source)
     mod = np.asarray(ds.query_modified)
-    open_hit = np.asarray(out.result.open_idx) == src
-    std_hit = np.asarray(out.result.std_idx) == src
+    open_hit = np.asarray(out.result.open_idx[:, 0]) == src
+    std_hit = np.asarray(out.result.std_idx[:, 0]) == src
     assert open_hit[mod].mean() > 0.6          # OMS recovers modified spectra
     assert std_hit[mod].mean() < 0.05          # standard search cannot
     assert std_hit[~mod].mean() > 0.8          # but works for unmodified
@@ -57,7 +57,7 @@ def test_hdc_quality_competitive_with_cosine(setup):
     cos = shifted_cosine(qv, rv, q.pmz, r.pmz, q.charge, r.charge,
                          bin_size=0.5)
     src = np.asarray(ds.query_source)
-    hdc_recall = (np.asarray(out.result.open_idx) == src).mean()
+    hdc_recall = (np.asarray(out.result.open_idx[:, 0]) == src).mean()
     cos_recall = (np.asarray(cos.open_idx) == src).mean()
     # paper: identification rates within the 33-66% SOTA band; here we ask
     # HDC to be within 15 points of the dense-cosine oracle
