@@ -1,0 +1,68 @@
+"""Ingest vs cold-start serving: the paper's Fig. 6 data-movement story.
+
+RapidOMS pays the encode cost once, at ingest, and serves from the packed
+library resident on the SmartSSD. This benchmark quantifies that split on
+the repro's LibraryStore at two library scales:
+
+  * ``encode_build``  — in-memory pipeline construction (encode everything
+    from raw spectra + build the blocked DB); the per-process cost a
+    store-less server pays on EVERY cold start;
+  * ``ingest_store``  — chunked encode + shard writes (one-time);
+  * ``store_reload``  — ``OMSPipeline.from_store``: merge the sorted shard
+    runs into the serving DB from memory-mapped files, zero re-encoding;
+
+and the bytes each path moves: raw peak arrays into the encoder vs packed
+shard bytes off the store (the near-storage stream).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.core import OMSConfig, OMSPipeline
+from repro.data.spectra import LibraryConfig, make_dataset
+
+SCALES = (2048, 8192)
+
+
+def _once(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(getattr(out, "db", out) if out is not None else ())
+    return out, time.perf_counter() - t0
+
+
+def main() -> None:
+    cfg = OMSConfig(dim=2048, max_r=512, q_block=16)
+    for n_refs in SCALES:
+        ds = make_dataset(LibraryConfig(n_refs=n_refs, n_queries=16))
+        raw_bytes = sum(x.size * x.dtype.itemsize
+                        for x in (ds.refs.mz, ds.refs.intensity))
+
+        _, t_mem = _once(lambda: OMSPipeline(cfg, ds.refs))
+
+        tmp = tempfile.mkdtemp(prefix="oms-ingest-bench-")
+        try:
+            path = f"{tmp}/store"
+            store, t_ingest = _once(
+                lambda: OMSPipeline.ingest(cfg, ds.refs, path))
+            store_bytes = store.nbytes()
+            pipe, t_reload = _once(lambda: OMSPipeline.from_store(path, cfg))
+
+            emit(f"ingest/{n_refs}/encode_build", t_mem * 1e6,
+                 f"raw={raw_bytes / 2**20:.1f}MiB every cold start")
+            emit(f"ingest/{n_refs}/ingest_store", t_ingest * 1e6,
+                 f"one-time; store={store_bytes / 2**20:.1f}MiB on disk")
+            emit(f"ingest/{n_refs}/store_reload", t_reload * 1e6,
+                 f"{t_mem / t_reload:.1f}x faster cold start, "
+                 f"{store_bytes / 2**20:.1f}MiB streamed, 0 encode")
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ MODULES = [
     ("fig6e", "benchmarks.fig6e_threshold_sweep"),
     ("fig6cd", "benchmarks.fig6_data_movement"),
     ("fusedvm", "benchmarks.fused_vs_matrix"),
+    ("ingest", "benchmarks.ingest_throughput"),
     ("energy", "benchmarks.energy_model"),
     ("roofline", "benchmarks.roofline"),
 ]

@@ -15,7 +15,7 @@ of blocks — which is what makes the pruning JIT-static (a fixed cap of
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Iterable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -83,22 +83,34 @@ def build_reference_db(
     pmz_n = np.asarray(pmz, dtype=np.float32)
     charge_n = np.asarray(charge, dtype=np.int32)
     decoy_n = np.asarray(is_decoy, dtype=bool)
-    R, W = hvs_n.shape
 
     order = np.lexsort((pmz_n, charge_n))
+    return _layout_sorted(hvs_n[order], pmz_n[order], charge_n[order],
+                          decoy_n[order], order.astype(np.int32), max_r=max_r)
+
+
+def _layout_sorted(hvs_n, pmz_n, charge_n, decoy_n, orig_n, *,
+                   max_r: int) -> ReferenceDB:
+    """Pad (charge, pmz)-sorted rows per charge partition, emit block metadata.
+
+    Inputs must already be sorted by (charge, pmz); ``orig_n`` carries the
+    caller's library index per row.
+    """
+    W = hvs_n.shape[1]
     charges = np.unique(charge_n)
 
     rows_h, rows_p, rows_c, rows_d, rows_o = [], [], [], [], []
     b_min, b_max, b_charge = [], [], []
     for c in charges:
-        sel = order[charge_n[order] == c]
+        sel = np.flatnonzero(charge_n == c)  # contiguous run (sorted input)
         n = len(sel)
         n_pad = (-n) % max_r
         ph = np.concatenate([hvs_n[sel], np.zeros((n_pad, W), dtype=hvs_n.dtype)])
         pp = np.concatenate([pmz_n[sel], np.full((n_pad,), np.float32(np.finfo(np.float32).max))])
         pc = np.concatenate([charge_n[sel], np.full((n_pad,), -1, dtype=np.int32)])
         pd = np.concatenate([decoy_n[sel], np.zeros((n_pad,), dtype=bool)])
-        po = np.concatenate([sel.astype(np.int32), np.full((n_pad,), -1, dtype=np.int32)])
+        po = np.concatenate([orig_n[sel].astype(np.int32),
+                             np.full((n_pad,), -1, dtype=np.int32)])
         rows_h.append(ph); rows_p.append(pp); rows_c.append(pc)
         rows_d.append(pd); rows_o.append(po)
         nb = (n + n_pad) // max_r
@@ -122,6 +134,132 @@ def build_reference_db(
         block_charge=jnp.asarray(np.array(b_charge, dtype=np.int32)),
         max_r=max_r,
     )
+
+
+# ---------------------------------------------------------------------------
+# Building from (charge, pmz)-sorted runs (store shards / ingest chunks)
+# ---------------------------------------------------------------------------
+
+
+class LibraryRun(NamedTuple):
+    """One (charge, pmz)-sorted run of encoded references (a store shard or
+    an in-memory ingest chunk). Arrays may be numpy or ``np.memmap``."""
+
+    hvs: Any       # (n, W) uint32 packed HVs
+    pmz: Any       # (n,) f32
+    charge: Any    # (n,) i32
+    is_decoy: Any  # (n,) bool
+    orig_idx: Any  # (n,) i32 — caller's library index
+
+
+def sort_key_offset(max_pmz: float) -> float:
+    """Charge multiplier for :func:`composite_sort_key`: any value strictly
+    above every pmz keeps the composite lexicographic."""
+    return float(np.ceil(max(float(max_pmz), 1.0)) + 1.0)
+
+
+def composite_sort_key(pmz, charge, *, off: float) -> np.ndarray:
+    """Composite float64 (charge, pmz) sort key, ``charge * off + pmz``.
+
+    Lexicographic for non-negative charges and pmz in ``[0, off)`` (both
+    hold for real precursor data — validated here); the f64 mantissa keeps
+    distinct float32 pmz values distinct at these scales. The single
+    definition is shared by the run merge below and the store's shard
+    sortedness check — keep them on the same key.
+    """
+    c = np.asarray(charge, dtype=np.float64)
+    p = np.asarray(pmz, dtype=np.float64)
+    if len(p) and (p.min() < 0.0 or c.min() < 0.0 or p.max() >= off):
+        raise ValueError("composite_sort_key needs 0 <= pmz < off and charge >= 0")
+    return c * off + p
+
+
+def _run_sort_keys(runs: Sequence[LibraryRun]) -> list[np.ndarray]:
+    hi = max((float(np.max(r.pmz)) for r in runs if len(r.pmz)), default=0.0)
+    off = sort_key_offset(hi)
+    return [composite_sort_key(r.pmz, r.charge, off=off) for r in runs]
+
+
+def _merge_two(a, b):
+    """Stable vectorised merge of two sorted (key, run, row) triples; rows
+    of ``a`` (the earlier runs) win ties via the searchsorted sides."""
+    ka, ra, wa = a
+    kb, rb, wb = b
+    pos_a = np.arange(len(ka), dtype=np.int64) + np.searchsorted(kb, ka, side="left")
+    pos_b = np.arange(len(kb), dtype=np.int64) + np.searchsorted(ka, kb, side="right")
+    n = len(ka) + len(kb)
+    k = np.empty(n, dtype=np.float64)
+    r = np.empty(n, dtype=np.int32)
+    w = np.empty(n, dtype=np.int64)
+    k[pos_a] = ka; k[pos_b] = kb
+    r[pos_a] = ra; r[pos_b] = rb
+    w[pos_a] = wa; w[pos_b] = wb
+    return k, r, w
+
+
+def merge_sorted_runs(keys: Sequence[np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
+    """Stable k-way merge of sorted key runs (tournament of two-run merges).
+
+    Returns ``(run_id, row_in_run)`` of the merged order: equal keys keep
+    earlier-run-first, earlier-row-first order — exactly what a stable
+    ``np.lexsort`` over the runs' concatenation would produce, without ever
+    concatenating (runs can be memory-mapped shards). Adjacent pairs merge
+    round by round, so total work is O(N log S) over 8-byte keys even for
+    stores grown shard-by-shard; the row payload is gathered once afterwards.
+    """
+    items = [(np.ascontiguousarray(k, dtype=np.float64),
+              np.full(len(k), i, dtype=np.int32),
+              np.arange(len(k), dtype=np.int64))
+             for i, k in enumerate(keys)]
+    if not items:
+        return (np.zeros(0, np.int32), np.zeros(0, np.int64))
+    while len(items) > 1:
+        items = [_merge_two(items[j], items[j + 1])
+                 if j + 1 < len(items) else items[j]
+                 for j in range(0, len(items), 2)]
+    _, run_id, row_in_run = items[0]
+    return run_id, row_in_run
+
+
+def build_reference_db_from_runs(runs: Iterable[LibraryRun], *,
+                                 max_r: int = 4096) -> ReferenceDB:
+    """Build the blocked DB by merging (charge, pmz)-sorted runs.
+
+    Equivalent (bit-identical, including tie order) to
+    ``build_reference_db`` over the runs' concatenation, but never performs
+    a monolithic lexsort: the global order comes from a stable merge of the
+    per-run sorted keys, and each run's payload — possibly a memory-mapped
+    store shard — is gathered once, in ascending row order, into the final
+    layout.
+    """
+    runs = [LibraryRun(*(np.asarray(a) if not isinstance(a, np.ndarray) else a
+                         for a in r)) for r in runs]
+    runs = [r for r in runs if len(r.pmz)]
+    if not runs:
+        raise ValueError("build_reference_db_from_runs: no rows")
+    run_id, row_in_run = merge_sorted_runs(_run_sort_keys(runs))
+
+    R = sum(len(r.pmz) for r in runs)
+    W = runs[0].hvs.shape[1]
+    hvs_s = np.empty((R, W), dtype=np.uint32)
+    pmz_s = np.empty((R,), dtype=np.float32)
+    charge_s = np.empty((R,), dtype=np.int32)
+    decoy_s = np.empty((R,), dtype=bool)
+    orig_s = np.empty((R,), dtype=np.int32)
+    # One stable argsort groups output positions by run (rows stay ascending
+    # within each group — the merge is stable), so the gather is a single
+    # O(N log N) pass instead of S boolean scans of the merged arrays.
+    pos = np.argsort(run_id, kind="stable")
+    bounds = np.cumsum([0] + [len(r.pmz) for r in runs])
+    for i, r in enumerate(runs):
+        at = pos[bounds[i]:bounds[i + 1]]
+        rows = row_in_run[at]          # ascending: sequential shard reads
+        hvs_s[at] = r.hvs[rows]
+        pmz_s[at] = r.pmz[rows]
+        charge_s[at] = r.charge[rows]
+        decoy_s[at] = r.is_decoy[rows]
+        orig_s[at] = r.orig_idx[rows]
+    return _layout_sorted(hvs_s, pmz_s, charge_s, decoy_s, orig_s, max_r=max_r)
 
 
 def shard_reference_db(db: ReferenceDB, n_shards: int) -> ReferenceDB:

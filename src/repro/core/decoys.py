@@ -5,6 +5,14 @@ library spectra so they keep realistic peak statistics but match nothing.
 We implement the shuffle-and-reposition scheme: fragment peaks keep their
 intensities but are moved to random m/z bins; the precursor m/z is kept so
 decoys compete inside the same precursor windows as their targets.
+
+Randomness is *row-keyed*: each library row r draws its decoy peaks from
+``fold_in(key, row_offset + r)``, so any contiguous slice of the library
+generates bit-identical decoys to a whole-library pass. This is what lets
+the chunked/streaming ingest path (``OMSPipeline.ingest`` writing store
+shards) and the in-memory build produce the same reference DB, and what
+makes ``append()``-grown stores match a one-shot build regardless of chunk
+boundaries.
 """
 from __future__ import annotations
 
@@ -13,9 +21,19 @@ import jax.numpy as jnp
 
 
 def make_decoy_peaks(key: jax.Array, mz: jax.Array, intensity: jax.Array,
-                     mz_min: float, mz_max: float) -> tuple[jax.Array, jax.Array]:
-    """Shuffle peak positions: same intensities, random m/z. (B,P) -> (B,P)."""
+                     mz_min: float, mz_max: float, *,
+                     row_offset: int = 0) -> tuple[jax.Array, jax.Array]:
+    """Shuffle peak positions: same intensities, random m/z. (B,P) -> (B,P).
+
+    ``row_offset`` is the global library index of row 0 of this slice; decoy
+    peaks for a given global row are independent of how the library is
+    chunked.
+    """
+    B, P = mz.shape
+    rows = jnp.arange(B, dtype=jnp.uint32) + jnp.uint32(row_offset)
+    keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(rows)
+    new_mz = jax.vmap(
+        lambda k: jax.random.uniform(k, (P,), minval=mz_min, maxval=mz_max,
+                                     dtype=mz.dtype))(keys)
     valid = intensity > 0
-    new_mz = jax.random.uniform(key, mz.shape, minval=mz_min, maxval=mz_max,
-                                dtype=mz.dtype)
     return jnp.where(valid, new_mz, 0.0), intensity

@@ -1,14 +1,26 @@
 """End-to-end OMS pipeline: preprocess -> encode -> block -> search -> FDR.
 
-This is the paper's Fig. 1b flow as a library object. Construction ("ingest")
-is the one-time near-storage step: encode the reference library (+ generated
-decoys), build the PMZ-sorted blocked DB. `search()` is the hot path: encode
-the query batch and run the blocked dual-window search, then FDR-filter.
+This is the paper's Fig. 1b flow as a library object, split the way the
+hardware splits it:
+
+  * **ingest** (one-time, near-storage): encode the reference library
+    (+ row-keyed decoys) in bounded-memory chunks and either build the
+    blocked DB in RAM (``OMSPipeline(cfg, refs)``) or persist the chunks as
+    sorted shards of an on-disk :class:`~repro.store.LibraryStore`
+    (``OMSPipeline.ingest``);
+  * **serve** (hot path): ``OMSPipeline.from_store`` cold-starts from the
+    packed shards — codebooks regenerated from the manifest seed, blocked
+    DB assembled by merging the shards' (charge, pmz)-sorted runs — with
+    *zero* reference re-encoding, then ``search()`` encodes only queries.
+
+Both construction paths run the identical chunked encode, so a reloaded
+store yields bit-identical search results to the in-memory build.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+import os
+from typing import TYPE_CHECKING, Iterator, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -16,10 +28,18 @@ import numpy as np
 
 from repro.core import decoys as decoys_mod
 from repro.core import encoding
-from repro.core.blocking import ReferenceDB, build_reference_db
+from repro.core.blocking import (LibraryRun, ReferenceDB,
+                                 build_reference_db_from_runs)
 from repro.core.fdr import FDRResult, fdr_filter
 from repro.core.search import SearchParams, SearchResult, oms_search, plan_search
 from repro.data.spectra import SpectraSet
+# Only the dependency-free constants at module level: repro.store.library_store
+# imports repro.core, so LibraryStore itself is imported lazily inside the
+# ingest()/from_store() bodies to keep `import repro.store` cycle-free.
+from repro.store.format import DECOY, TARGET
+
+if TYPE_CHECKING:
+    from repro.store import LibraryStore
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,46 +76,159 @@ class OMSOutput(NamedTuple):
     std_fdr: FDRResult         # FDR filtering over the standard-search matches
 
 
+# ---------------------------------------------------------------------------
+# Shared ingest machinery (in-memory build and store writer both use this)
+# ---------------------------------------------------------------------------
+
+
+def _derive_keys(cfg: OMSConfig) -> tuple[jax.Array, jax.Array]:
+    """(codebook key, decoy key) from the config seed — the only PRNG state;
+    reproducing these from the manifest is what lets a store skip codebook
+    persistence entirely."""
+    k_cb, k_dec = jax.random.split(jax.random.PRNGKey(cfg.seed))
+    return k_cb, k_dec
+
+
+def _make_codebooks(cfg: OMSConfig) -> encoding.Codebooks:
+    k_cb, _ = _derive_keys(cfg)
+    return encoding.make_codebooks(
+        k_cb, n_bins=cfg.n_bins, n_levels=cfg.n_levels, dim=cfg.dim)
+
+
+def _encode_library_runs(
+    cfg: OMSConfig, codebooks: encoding.Codebooks, k_dec: jax.Array,
+    refs: SpectraSet, *, encode_batch: int, chunk_rows: int,
+    tgt_offset: int = 0,
+) -> Iterator[tuple[str, np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
+    """Chunked/streaming library encode.
+
+    Yields ``(kind, hvs, pmz, charge, tgt_idx)`` numpy chunks — every target
+    chunk first, then (if ``cfg.add_decoys``) every decoy chunk — each
+    sorted by (charge, pmz), i.e. ready to be a store shard or a merge run.
+    Host memory is bounded by one chunk of encode intermediates at a time.
+
+    Per-row determinism (encoding touches only its own row; decoy peaks are
+    keyed by global target index ``tgt_offset + row``) makes the output
+    independent of ``chunk_rows``/``encode_batch`` boundaries — the property
+    that makes ``append()``-grown stores match one-shot builds bit-for-bit.
+    """
+    n = refs.mz.shape[0]
+    kinds = (TARGET, DECOY) if cfg.add_decoys else (TARGET,)
+    for kind in kinds:
+        for s in range(0, n, chunk_rows):
+            e = min(s + chunk_rows, n)
+            mz, inten = refs.mz[s:e], refs.intensity[s:e]
+            if kind == DECOY:
+                mz, inten = decoys_mod.make_decoy_peaks(
+                    k_dec, mz, inten, cfg.mz_min, cfg.mz_max,
+                    row_offset=tgt_offset + s)
+            pre = encoding.preprocess_spectra(
+                mz, inten, refs.pmz[s:e], refs.charge[s:e],
+                bin_size=cfg.bin_size, mz_min=cfg.mz_min, mz_max=cfg.mz_max,
+                n_levels=cfg.n_levels)
+            hvs = np.asarray(encoding.encode_spectra_batched(
+                pre, codebooks, batch=encode_batch))
+            pmz = np.asarray(pre.pmz, dtype=np.float32)
+            charge = np.asarray(pre.charge, dtype=np.int32)
+            order = np.lexsort((pmz, charge))
+            tgt_idx = (tgt_offset + s + order).astype(np.int32)
+            yield kind, hvs[order], pmz[order], charge[order], tgt_idx
+
+
 class OMSPipeline:
     """Stateful pipeline: holds codebooks + the blocked reference DB."""
 
     def __init__(self, cfg: OMSConfig, refs: SpectraSet, *,
-                 encode_batch: int = 512):
+                 encode_batch: int = 512, chunk_rows: int = 4096):
         self.cfg = cfg
-        key = jax.random.PRNGKey(cfg.seed)
-        k_cb, k_dec = jax.random.split(key)
-        self.codebooks = encoding.make_codebooks(
-            k_cb, n_bins=cfg.n_bins, n_levels=cfg.n_levels, dim=cfg.dim)
+        _, k_dec = _derive_keys(cfg)
+        self.codebooks = _make_codebooks(cfg)
 
-        # --- ingest: encode targets (+decoys), build blocked DB ------------
-        ref_sets = [refs]
-        decoy_flags = [jnp.zeros((refs.mz.shape[0],), bool)]
-        if cfg.add_decoys:
-            dmz, dint = decoys_mod.make_decoy_peaks(
-                k_dec, refs.mz, refs.intensity, cfg.mz_min, cfg.mz_max)
-            ref_sets.append(SpectraSet(dmz, dint, refs.pmz, refs.charge))
-            decoy_flags.append(jnp.ones((refs.mz.shape[0],), bool))
+        # --- ingest (in-memory): chunked encode -> sorted runs -> merged DB.
+        # orig_idx in the DB refers to the concatenated (targets ++ decoys)
+        # layout; targets keep their library index, decoys get n_targets + i.
+        self.n_targets = int(refs.mz.shape[0])
+        runs = []
+        for kind, hvs, pmz, charge, tgt_idx in _encode_library_runs(
+                cfg, self.codebooks, k_dec, refs,
+                encode_batch=encode_batch, chunk_rows=chunk_rows):
+            is_d = kind == DECOY
+            orig = tgt_idx + (np.int32(self.n_targets) if is_d else np.int32(0))
+            runs.append(LibraryRun(hvs, pmz, charge,
+                                   np.full((len(pmz),), is_d), orig))
+        self.db: ReferenceDB = build_reference_db_from_runs(
+            runs, max_r=cfg.max_r)
 
-        all_hvs, all_pmz, all_charge = [], [], []
-        for s in ref_sets:
-            pre = encoding.preprocess_spectra(
-                s.mz, s.intensity, s.pmz, s.charge,
+    # ------------------------------------------------------------------
+    # Ingest/serve split: persistent store paths
+    # ------------------------------------------------------------------
+    @classmethod
+    def ingest(cls, cfg: OMSConfig, refs: SpectraSet, store_path: str, *,
+               encode_batch: int = 512, chunk_rows: int = 4096,
+               append: bool = False) -> LibraryStore:
+        """Encode ``refs`` chunk-by-chunk into an on-disk LibraryStore.
+
+        Streams: each chunk's packed HVs are written as a sorted shard as
+        soon as they are produced, so host memory stays bounded by one chunk
+        regardless of library size; the manifest is committed once, after
+        the last shard, so a crashed ingest leaves the store at its prior
+        state (orphaned shard files are ignored and overwritten on retry).
+        With ``append=True`` the store must already exist with a matching
+        config; new references are added as new shards (existing shards are
+        never rewritten) and their decoys are keyed by global index, so the
+        grown store is bit-identical to a one-shot build of the full
+        library.
+        """
+        from repro.store import LibraryStore
+        if append:
+            store = LibraryStore.open(store_path)
+            store.check_config(cfg)
+            tgt_offset = store.n_targets
+        else:
+            store = LibraryStore.create(
+                store_path, dim=cfg.dim, n_levels=cfg.n_levels,
                 bin_size=cfg.bin_size, mz_min=cfg.mz_min, mz_max=cfg.mz_max,
-                n_levels=cfg.n_levels)
-            all_hvs.append(encoding.encode_spectra_batched(
-                pre, self.codebooks, batch=encode_batch))
-            all_pmz.append(pre.pmz)
-            all_charge.append(pre.charge)
+                seed=cfg.seed, add_decoys=cfg.add_decoys)
+            tgt_offset = 0
+        _, k_dec = _derive_keys(cfg)
+        codebooks = _make_codebooks(cfg)
+        for kind, hvs, pmz, charge, tgt_idx in _encode_library_runs(
+                cfg, codebooks, k_dec, refs, encode_batch=encode_batch,
+                chunk_rows=chunk_rows, tgt_offset=tgt_offset):
+            store.append_shard(kind, hvs, pmz, charge, tgt_idx, commit=False)
+        store.commit()
+        return store
 
-        hvs = jnp.concatenate(all_hvs)
-        pmz = jnp.concatenate(all_pmz)
-        charge = jnp.concatenate(all_charge)
-        is_decoy = jnp.concatenate(decoy_flags)
-        self.n_targets = refs.mz.shape[0]
-        # orig_idx in the DB refers to this concatenated (targets ++ decoys)
-        # layout; targets keep their library index, decoys get index - too.
-        self.db: ReferenceDB = build_reference_db(
-            hvs, pmz, charge, is_decoy, max_r=cfg.max_r)
+    @classmethod
+    def from_store(cls, store: LibraryStore | str | os.PathLike,
+                   cfg: OMSConfig | None = None,
+                   **overrides) -> "OMSPipeline":
+        """Cold-start a serving pipeline from a persisted store.
+
+        No reference encoding happens: codebooks are regenerated from the
+        manifest seed and the blocked DB is assembled by stable-merging the
+        shards' (charge, pmz)-sorted runs straight from the memory-mapped
+        files. If ``cfg`` is given it must match the store's encoding
+        fields (:class:`repro.store.StoreConfigError` otherwise); when
+        omitted, a config is reconstructed from the manifest and
+        ``overrides`` may set serving-side knobs (``backend``, ``top_k``,
+        ``max_r``, ...).
+        """
+        from repro.store import LibraryStore
+        if not isinstance(store, LibraryStore):
+            store = LibraryStore.open(os.fspath(store))
+        if cfg is None:
+            cfg = OMSConfig(**{**store.config_fields(), **overrides})
+        else:
+            if overrides:
+                cfg = dataclasses.replace(cfg, **overrides)
+            store.check_config(cfg)
+        self = cls.__new__(cls)
+        self.cfg = cfg
+        self.codebooks = _make_codebooks(cfg)
+        self.n_targets = store.n_targets
+        self.db = store.load_reference_db(max_r=cfg.max_r)
+        return self
 
     # ------------------------------------------------------------------
     def encode_queries(self, queries: SpectraSet) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -118,11 +251,13 @@ class OMSPipeline:
             backend=backend or self.cfg.backend, exhaustive=exhaustive,
             top_k=self.cfg.top_k if top_k is None else top_k)
 
-    def search(self, queries: SpectraSet, *, exhaustive: bool = False,
-               open_tol_da: float | None = None,
-               backend: str | None = None,
-               top_k: int | None = None) -> OMSOutput:
-        hvs, q_pmz, q_charge = self.encode_queries(queries)
+    def search_encoded(self, hvs: jax.Array, q_pmz: jax.Array,
+                       q_charge: jax.Array, *, exhaustive: bool = False,
+                       open_tol_da: float | None = None,
+                       backend: str | None = None,
+                       top_k: int | None = None) -> OMSOutput:
+        """Search already-encoded query HVs (callers that hold the encoded
+        batch — the serving launcher, rescoring loops — avoid re-encoding)."""
         # One host conversion, shared by plan_search and the padding plan —
         # oms_search itself never syncs device->host.
         qp_np = np.asarray(q_pmz)
@@ -145,6 +280,16 @@ class OMSPipeline:
             open_fdr=_fdr(result.open_row, result.open_sim),
             std_fdr=_fdr(result.std_row, result.std_sim),
         )
+
+    def search(self, queries: SpectraSet, *, exhaustive: bool = False,
+               open_tol_da: float | None = None,
+               backend: str | None = None,
+               top_k: int | None = None) -> OMSOutput:
+        hvs, q_pmz, q_charge = self.encode_queries(queries)
+        return self.search_encoded(hvs, q_pmz, q_charge,
+                                   exhaustive=exhaustive,
+                                   open_tol_da=open_tol_da, backend=backend,
+                                   top_k=top_k)
 
     # convenience for quality benchmarks -------------------------------
     def identifications(self, out: OMSOutput) -> int:

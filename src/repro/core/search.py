@@ -283,18 +283,36 @@ def plan_search(db: ReferenceDB, q_pmz, q_charge, *, open_tol_da: float,
     bmin = np.asarray(db.block_min); bmax = np.asarray(db.block_max)
     bch = np.asarray(db.block_charge)
     qp = np.asarray(q_pmz); qc = np.asarray(q_charge)
+    Q = len(qp)
+    if Q == 0:
+        return min(1 + safety_blocks, db.n_blocks)
     order = np.lexsort((qp, qc))
     qp, qc = qp[order], qc[order]
+
+    # Vectorised over (q-block, charge) segments: sorted order makes each
+    # segment a contiguous run, so its pmz window is [first - tol, last + tol].
+    group = np.arange(Q) // q_block
+    starts = np.flatnonzero(
+        np.r_[True, (np.diff(group) != 0) | (np.diff(qc) != 0)])
+    ends = np.r_[starts[1:], Q]               # exclusive
+    lo = qp[starts] - open_tol_da
+    hi = qp[ends - 1] + open_tol_da
+    seg_c = qc[starts]
+
+    # Blocks of one charge are a contiguous run with bmin/bmax both ascending
+    # (rows are pmz-sorted), so the hit set is the index interval
+    # [first bmax >= lo, last bmin <= hi] — two searchsorteds per charge.
     worst = 1
-    for s in range(0, len(qp), q_block):
-        grp_p, grp_c = qp[s:s + q_block], qc[s:s + q_block]
-        for c in np.unique(grp_c):
-            gsel = grp_p[grp_c == c]
-            lo, hi = gsel.min() - open_tol_da, gsel.max() + open_tol_da
-            hit = (bch == c) & (bmax >= lo) & (bmin <= hi)
-            if hit.any():
-                idx = np.flatnonzero(hit)
-                worst = max(worst, int(idx.max() - idx.min() + 1))
+    for c in np.unique(seg_c):
+        blocks = np.flatnonzero(bch == c)
+        if len(blocks) == 0:
+            continue
+        m = seg_c == c
+        first = np.searchsorted(bmax[blocks], lo[m], side="left")
+        last = np.searchsorted(bmin[blocks], hi[m], side="right") - 1
+        spans = (last - first + 1)[first <= last]
+        if len(spans):
+            worst = max(worst, int(spans.max()))
     return min(worst + safety_blocks, db.n_blocks)
 
 

@@ -88,12 +88,44 @@ def sharded_search(db: ReferenceDB, q_hvs, q_pmz, q_charge,
 
     fn = shard_map(
         local, mesh=mesh,
-        in_specs=(db_specs_to_tuple(db_specs), P(), P(), P()),
+        in_specs=(db_specs, P(), P(), P()),
         out_specs=(P(), P(), P(), P()),
         check_rep=False,
     )
     return fn(db, q_hvs, q_pmz, q_charge), db
 
 
-def db_specs_to_tuple(specs: ReferenceDB):
-    return specs
+# ---------------------------------------------------------------------------
+# Near-storage loading: store shards -> mesh slabs
+# ---------------------------------------------------------------------------
+
+
+def sharded_db_from_store(store, mesh: Mesh, *, max_r: int,
+                          model_axis: str = "model") -> ReferenceDB:
+    """Cold-start the sharded serving DB straight from a LibraryStore.
+
+    The store's (charge, pmz)-sorted shards are merged into the blocked
+    layout (memory-mapped reads, zero re-encoding), the block dimension is
+    padded so the DB splits into ``mesh.shape[model_axis]`` contiguous
+    slabs, and each slab is placed on its model-axis device with an
+    explicit NamedSharding — the TPU analogue of the paper's per-SmartSSD
+    DB slab residency. The result feeds ``sharded_search`` directly (which
+    re-applies the now-no-op block padding).
+    """
+    n_model = mesh.shape[model_axis]
+    db = shard_reference_db(store.load_reference_db(max_r=max_r), n_model)
+
+    def _place(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return ReferenceDB(
+        hvs=_place(db.hvs, P(model_axis, None)),
+        pmz=_place(db.pmz, P(model_axis)),
+        charge=_place(db.charge, P(model_axis)),
+        is_decoy=_place(db.is_decoy, P(model_axis)),
+        orig_idx=_place(db.orig_idx, P(model_axis)),
+        block_min=_place(db.block_min, P(model_axis)),
+        block_max=_place(db.block_max, P(model_axis)),
+        block_charge=_place(db.block_charge, P(model_axis)),
+        max_r=db.max_r,
+    )

@@ -1,12 +1,18 @@
 """OMS serving launcher — the paper's end-to-end flow as a service.
 
-Ingest a (synthetic, Table-I-calibrated) reference library once, then serve
-batched query searches: preprocess -> HD-encode -> blocked dual-window
-Hamming search -> target-decoy FDR. ``--sharded`` distributes the reference
-DB over the local mesh's model axis (the SmartSSD scale-out analogue).
+Three entry points:
 
-    PYTHONPATH=src python -m repro.launch.oms --refs 8192 --queries 512 \
-        [--dim 4096] [--open-tol 75] [--top-k 1] \
+  * ``build``  — ingest: encode a reference library chunk-by-chunk into a
+    persistent sharded LibraryStore (the near-storage step, paid once);
+  * ``search`` — serve: cold-start from the store (packed HVs only, zero
+    reference re-encoding) and run batched query searches;
+  * legacy one-shot (no subcommand): in-memory ingest + search, as before.
+
+    PYTHONPATH=src python -m repro.launch.oms build --store /tmp/oms \\
+        --refs 8192 [--dim 4096] [--append]
+    PYTHONPATH=src python -m repro.launch.oms search --store /tmp/oms \\
+        --queries 512 [--backend fused] [--top-k 4]
+    PYTHONPATH=src python -m repro.launch.oms --refs 8192 --queries 512 \\
         [--backend vpu|mxu|kernel_vpu|kernel_mxu|fused|fused_xla]
 """
 from __future__ import annotations
@@ -22,11 +28,20 @@ from repro.core.blocking import candidate_block_stats
 from repro.data.spectra import LibraryConfig, make_dataset
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--refs", type=int, default=8192)
-    ap.add_argument("--queries", type=int, default=512)
+def _dataset_args(ap, refs_default=8192):
+    ap.add_argument("--refs", type=int, default=refs_default)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="synthetic dataset seed (codebook seed is cfg.seed)")
+
+
+def _encoding_args(ap):
     ap.add_argument("--dim", type=int, default=4096)
+    ap.add_argument("--n-levels", type=int, default=32)
+    _dataset_args(ap)
+
+
+def _serving_args(ap):
+    ap.add_argument("--queries", type=int, default=512)
     ap.add_argument("--max-r", type=int, default=1024)
     ap.add_argument("--q-block", type=int, default=16)
     ap.add_argument("--open-tol", type=float, default=75.0)
@@ -37,23 +52,20 @@ def main(argv=None):
                     help="ranked winners kept per query and window")
     ap.add_argument("--exhaustive", action="store_true",
                     help="HyperOMS-style full scan (baseline)")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
 
-    cfg = OMSConfig(dim=args.dim, max_r=args.max_r, q_block=args.q_block,
-                    open_tol_da=args.open_tol, backend=args.backend,
-                    top_k=args.top_k)
-    ds = make_dataset(LibraryConfig(n_refs=args.refs, n_queries=args.queries,
-                                    open_tol_da=args.open_tol,
-                                    seed=args.seed))
-    t0 = time.perf_counter()
-    pipe = OMSPipeline(cfg, ds.refs)
-    t_ingest = time.perf_counter() - t0
-    print(f"[oms] ingested {pipe.db.n_rows} rows "
-          f"({pipe.db.n_blocks} blocks of {cfg.max_r}) in {t_ingest:.2f}s")
 
+def _dataset(args):
+    return make_dataset(LibraryConfig(n_refs=args.refs,
+                                      n_queries=getattr(args, "queries", 1),
+                                      open_tol_da=getattr(args, "open_tol", 75.0),
+                                      seed=args.seed))
+
+
+def _serve(pipe: OMSPipeline, ds, args) -> None:
+    """Encode the query batch ONCE; search and block stats reuse it."""
     t0 = time.perf_counter()
-    out = pipe.search(ds.queries, exhaustive=args.exhaustive)
+    hvs, q_pmz, q_charge = pipe.encode_queries(ds.queries)
+    out = pipe.search_encoded(hvs, q_pmz, q_charge, exhaustive=args.exhaustive)
     jax.block_until_ready(out.result)
     t_search = time.perf_counter() - t0
 
@@ -61,13 +73,13 @@ def main(argv=None):
     open_idx = np.asarray(out.result.open_idx)   # (Q, top_k)
     std_idx = np.asarray(out.result.std_idx)
     mod = np.asarray(ds.query_modified)
-    hvs, qp, qc = pipe.encode_queries(ds.queries)
-    stats = candidate_block_stats(pipe.db, np.asarray(qp), np.asarray(qc),
-                                  args.open_tol)
+    stats = candidate_block_stats(pipe.db, np.asarray(q_pmz),
+                                  np.asarray(q_charge), args.open_tol)
 
+    cfg = pipe.cfg
     print(f"[oms] searched {args.queries} queries in {t_search:.2f}s "
-          f"({args.queries / t_search:.0f} q/s, backend={args.backend}, "
-          f"top_k={args.top_k}, "
+          f"({args.queries / t_search:.0f} q/s, backend={cfg.backend}, "
+          f"top_k={cfg.top_k}, "
           f"{'exhaustive' if args.exhaustive else 'blocked'})")
     print(f"[oms] comparisons reduction at +/-{args.open_tol} Da: "
           f"{stats['reduction']:.2f}x vs exhaustive")
@@ -75,12 +87,92 @@ def main(argv=None):
           f"(modified queries: {np.mean((open_idx[:, 0] == src)[mod]):.3f})")
     print(f"[oms] standard-search recall@1: {np.mean(std_idx[:, 0] == src):.3f} "
           f"(modified queries: {np.mean((std_idx[:, 0] == src)[mod]):.3f})")
-    if args.top_k > 1:
+    if cfg.top_k > 1:
         hit_any = (open_idx == src[:, None]).any(axis=1)
-        print(f"[oms] open-search recall@{args.top_k}:     "
+        print(f"[oms] open-search recall@{cfg.top_k}:     "
               f"{hit_any.mean():.3f} (modified: {hit_any[mod].mean():.3f})")
     print(f"[oms] identifications @ {cfg.fdr_threshold:.0%} FDR: "
-          f"{int(out.open_fdr.n_accepted)} / {args.queries * args.top_k}")
+          f"{int(out.open_fdr.n_accepted)} / {args.queries * cfg.top_k}")
+
+
+# ---------------------------------------------------------------------------
+# Subcommands
+# ---------------------------------------------------------------------------
+
+
+def cmd_build(argv) -> None:
+    ap = argparse.ArgumentParser(prog="repro.launch.oms build")
+    ap.add_argument("--store", required=True, help="store directory")
+    ap.add_argument("--chunk-rows", type=int, default=4096)
+    ap.add_argument("--append", action="store_true",
+                    help="grow an existing store (new shards only)")
+    _encoding_args(ap)
+    args = ap.parse_args(argv)
+
+    cfg = OMSConfig(dim=args.dim, n_levels=args.n_levels)
+    ds = _dataset(args)
+    t0 = time.perf_counter()
+    store = OMSPipeline.ingest(cfg, ds.refs, args.store,
+                               chunk_rows=args.chunk_rows, append=args.append)
+    t = time.perf_counter() - t0
+    print(f"[oms build] {'appended to' if args.append else 'wrote'} "
+          f"{args.store}: {store.n_rows} rows "
+          f"({store.n_targets} targets, {len(store.shards)} shards, "
+          f"{store.nbytes() / 2**20:.1f} MiB) in {t:.2f}s")
+
+
+def cmd_search(argv) -> None:
+    ap = argparse.ArgumentParser(prog="repro.launch.oms search")
+    ap.add_argument("--store", required=True, help="store directory")
+    # --refs/--seed regenerate the synthetic queries (and their ground
+    # truth); --refs defaults to the store's own target count so a plain
+    # `search --store S` matches the `build` that produced S.
+    _dataset_args(ap, refs_default=None)
+    _serving_args(ap)
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    pipe = OMSPipeline.from_store(
+        args.store, max_r=args.max_r, q_block=args.q_block,
+        open_tol_da=args.open_tol, backend=args.backend, top_k=args.top_k)
+    t_load = time.perf_counter() - t0
+    print(f"[oms search] cold-started {pipe.db.n_rows} rows "
+          f"({pipe.db.n_blocks} blocks of {pipe.cfg.max_r}) from {args.store} "
+          f"in {t_load:.2f}s — no reference re-encoding")
+
+    if args.refs is None:
+        args.refs = pipe.n_targets
+    ds = _dataset(args)
+    _serve(pipe, ds, args)
+
+
+def cmd_oneshot(argv) -> None:
+    ap = argparse.ArgumentParser(prog="repro.launch.oms")
+    _encoding_args(ap)
+    _serving_args(ap)
+    args = ap.parse_args(argv)
+
+    cfg = OMSConfig(dim=args.dim, n_levels=args.n_levels, max_r=args.max_r,
+                    q_block=args.q_block, open_tol_da=args.open_tol,
+                    backend=args.backend, top_k=args.top_k)
+    ds = _dataset(args)
+    t0 = time.perf_counter()
+    pipe = OMSPipeline(cfg, ds.refs)
+    t_ingest = time.perf_counter() - t0
+    print(f"[oms] ingested {pipe.db.n_rows} rows "
+          f"({pipe.db.n_blocks} blocks of {cfg.max_r}) in {t_ingest:.2f}s")
+    _serve(pipe, ds, args)
+
+
+def main(argv=None):
+    import sys
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "build":
+        cmd_build(argv[1:])
+    elif argv and argv[0] == "search":
+        cmd_search(argv[1:])
+    else:
+        cmd_oneshot(argv)
 
 
 if __name__ == "__main__":

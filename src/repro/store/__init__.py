@@ -1,0 +1,7 @@
+"""Near-storage library store: persistent sharded packed-HV references."""
+from repro.store.library_store import (DECOY, FORMAT_VERSION, TARGET,
+                                       LibraryStore, ShardInfo, StoreConfigError,
+                                       StoreError)
+
+__all__ = ["LibraryStore", "ShardInfo", "StoreError", "StoreConfigError",
+           "FORMAT_VERSION", "TARGET", "DECOY"]

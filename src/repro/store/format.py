@@ -1,0 +1,18 @@
+"""Store format constants — dependency-free on purpose.
+
+``repro.core.pipeline`` (the ingest writer) and ``repro.store.library_store``
+(the reader) both need these; keeping them in a module that imports nothing
+from ``repro.core`` is what breaks the pipeline <-> store import cycle.
+"""
+FORMAT_VERSION = 1
+
+TARGET = "target"
+DECOY = "decoy"
+
+# Per-shard files: "<name>.<part>.npy" for each part below.
+SIDECARS = ("hvs", "pmz", "charge", "decoy", "orig")
+
+# Manifest keys that must match the serving OMSConfig for search-compatible
+# query encoding (codebooks + preprocessing all derive from these).
+CONFIG_KEYS = ("dim", "n_levels", "bin_size", "mz_min", "mz_max", "seed",
+               "add_decoys")

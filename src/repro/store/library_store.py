@@ -1,0 +1,275 @@
+"""On-disk sharded library store — the SmartSSD-resident encoded library.
+
+RapidOMS's near-storage premise is that the *encoded* reference library
+lives on the device in packed binary form and is streamed to the compute
+engine at serve time; encoding is paid once, at ingest. This module is that
+store as a directory layout:
+
+    store/
+      manifest.json            # encoding config + shard table (see below)
+      shard_00000.hvs.npy      # (rows, dim/32) uint32 — packed HVs
+      shard_00000.pmz.npy      # (rows,) float32 — precursor neutral mass
+      shard_00000.charge.npy   # (rows,) int32
+      shard_00000.decoy.npy    # (rows,) bool
+      shard_00000.orig.npy     # (rows,) int32 — index into the target library
+      shard_00001.hvs.npy      ...
+
+Each shard is one ingest chunk, role-pure (all-target or all-decoy, the
+manifest records which) and sorted by (charge, pmz) — a sorted *run*. The
+serve path (``OMSPipeline.from_store``) memory-maps the shards and builds
+the blocked :class:`~repro.core.blocking.ReferenceDB` by stable-merging the
+runs (``build_reference_db_from_runs``), never re-encoding and never
+lexsorting a monolithic copy.
+
+The manifest pins everything needed to reproduce search-compatible query
+encoding: ``dim``, ``n_levels``, ``bin_size``, ``mz_min``/``mz_max`` and
+the codebook ``seed`` (codebooks are regenerated from the seed at load — a
+few KiB of PRNG work instead of megabytes of codebook storage), plus a
+``format_version`` and the shard table with row counts.
+
+``append()`` adds new references as *new* shards and rewrites only the
+manifest (atomically, via tmp+rename); existing shard files are never
+touched. Because decoy randomness is row-keyed (see ``core.decoys``) and
+the merge order depends only on each row's (charge, pmz, role, library
+index), a store grown by appends is search-identical to a one-shot build.
+
+The ``orig`` sidecar stores the row's index into the *target* library
+(decoy rows carry their source target's index); the concatenated-layout
+index used by ``ReferenceDB.orig_idx`` (decoys offset by the total target
+count) is derived at load time, which is what keeps appends from having to
+rewrite decoy sidecars when the target count grows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.blocking import (LibraryRun, ReferenceDB,
+                                 build_reference_db_from_runs,
+                                 composite_sort_key, sort_key_offset)
+from repro.store.format import (CONFIG_KEYS, DECOY, FORMAT_VERSION, SIDECARS,
+                                TARGET)
+
+_SIDECARS = SIDECARS
+
+
+class StoreError(ValueError):
+    """Malformed or incompatible library store."""
+
+
+class StoreConfigError(StoreError):
+    """Serving config does not match the store's manifest."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardInfo:
+    name: str   # file stem, e.g. "shard_00000"
+    kind: str   # TARGET | DECOY
+    rows: int
+
+
+class LibraryStore:
+    """Persistent sharded store of encoded (packed-HV) references."""
+
+    def __init__(self, path: str, manifest: dict):
+        self.path = str(path)
+        self.manifest = manifest
+
+    # -- lifecycle ----------------------------------------------------------
+    @classmethod
+    def create(cls, path: str, *, dim: int, n_levels: int, bin_size: float,
+               mz_min: float, mz_max: float, seed: int,
+               add_decoys: bool) -> "LibraryStore":
+        os.makedirs(path, exist_ok=True)
+        mpath = os.path.join(path, "manifest.json")
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                existing = json.load(f)
+            if existing.get("shards"):
+                raise StoreError(f"store already exists at {path!r} "
+                                 "(open it and append, or use a fresh directory)")
+            # zero-shard manifest = a crashed first ingest; safe to re-init
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "dim": int(dim), "n_levels": int(n_levels),
+            "bin_size": float(bin_size),
+            "mz_min": float(mz_min), "mz_max": float(mz_max),
+            "seed": int(seed), "add_decoys": bool(add_decoys),
+            "n_targets": 0,
+            "shards": [],
+        }
+        store = cls(path, manifest)
+        store._write_manifest()
+        return store
+
+    @classmethod
+    def open(cls, path: str) -> "LibraryStore":
+        mpath = os.path.join(path, "manifest.json")
+        if not os.path.exists(mpath):
+            raise StoreError(f"no library store at {path!r} (missing manifest.json)")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        ver = manifest.get("format_version")
+        if ver != FORMAT_VERSION:
+            raise StoreError(f"unsupported store format_version {ver!r} "
+                             f"(this build reads {FORMAT_VERSION})")
+        store = cls(path, manifest)
+        store.validate()
+        return store
+
+    def _write_manifest(self) -> None:
+        # Atomic: shard files are written first, the manifest (the commit
+        # point) last, via tmp + rename — a crashed ingest/append leaves the
+        # old manifest and some orphaned shard files, which are ignored (and
+        # overwritten by name on the next attempt).
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".manifest.tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.manifest, f, indent=1)
+            os.replace(tmp, os.path.join(self.path, "manifest.json"))
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def validate(self) -> None:
+        """Check shard files exist and row counts match the manifest."""
+        for s in self.shards:
+            for part in _SIDECARS:
+                p = self._file(s.name, part)
+                if not os.path.exists(p):
+                    raise StoreError(f"store shard file missing: {p}")
+            pmz = np.load(self._file(s.name, "pmz"), mmap_mode="r")
+            if pmz.shape[0] != s.rows:
+                raise StoreError(
+                    f"shard {s.name}: manifest says {s.rows} rows, "
+                    f"sidecar has {pmz.shape[0]}")
+
+    # -- introspection ------------------------------------------------------
+    def _file(self, name: str, part: str) -> str:
+        return os.path.join(self.path, f"{name}.{part}.npy")
+
+    @property
+    def shards(self) -> list[ShardInfo]:
+        return [ShardInfo(**s) for s in self.manifest["shards"]]
+
+    @property
+    def n_targets(self) -> int:
+        return int(self.manifest["n_targets"])
+
+    @property
+    def n_rows(self) -> int:
+        return sum(s.rows for s in self.shards)
+
+    @property
+    def n_words(self) -> int:
+        return int(self.manifest["dim"]) // 32
+
+    def nbytes(self) -> int:
+        """Total on-disk payload (shard files, manifest excluded)."""
+        return sum(os.path.getsize(self._file(s.name, part))
+                   for s in self.shards for part in _SIDECARS)
+
+    def config_fields(self) -> dict:
+        return {k: self.manifest[k] for k in CONFIG_KEYS}
+
+    def check_config(self, cfg) -> None:
+        """Raise :class:`StoreConfigError` unless ``cfg`` (an OMSConfig) is
+        encoding-compatible with this store."""
+        for k in CONFIG_KEYS:
+            want, got = self.manifest[k], getattr(cfg, k)
+            if want != got:
+                raise StoreConfigError(
+                    f"store at {self.path!r} was built with {k}={want!r}, "
+                    f"serving config has {k}={got!r}")
+
+    # -- writes -------------------------------------------------------------
+    def append_shard(self, kind: str, hvs: np.ndarray, pmz: np.ndarray,
+                     charge: np.ndarray, orig_idx: np.ndarray, *,
+                     commit: bool = True) -> ShardInfo:
+        """Write one (charge, pmz)-sorted, role-pure shard and record it in
+        the manifest. Never touches existing shard files.
+
+        With ``commit=False`` the shard files are written but the on-disk
+        manifest is not — the caller batches several shards (an ingest pass)
+        and makes them visible atomically with a single :meth:`commit`.
+        Until then a crash leaves the store exactly as it was.
+        """
+        if kind not in (TARGET, DECOY):
+            raise StoreError(f"shard kind must be {TARGET!r} or {DECOY!r}")
+        hvs = np.ascontiguousarray(hvs, dtype=np.uint32)
+        pmz = np.ascontiguousarray(pmz, dtype=np.float32)
+        charge = np.ascontiguousarray(charge, dtype=np.int32)
+        orig_idx = np.ascontiguousarray(orig_idx, dtype=np.int32)
+        n = hvs.shape[0]
+        if hvs.shape[1] != self.n_words:
+            raise StoreError(f"shard HV width {hvs.shape[1]} != store "
+                             f"dim/32 = {self.n_words}")
+        if not (pmz.shape == charge.shape == orig_idx.shape == (n,)):
+            raise StoreError("shard sidecar row counts disagree")
+        key = composite_sort_key(pmz, charge,
+                                 off=sort_key_offset(pmz.max(initial=0.0)))
+        if np.any(np.diff(key) < 0):
+            raise StoreError("shard rows must be (charge, pmz)-sorted")
+
+        name = f"shard_{len(self.shards):05d}"
+        np.save(self._file(name, "hvs"), hvs)
+        np.save(self._file(name, "pmz"), pmz)
+        np.save(self._file(name, "charge"), charge)
+        np.save(self._file(name, "decoy"), np.full((n,), kind == DECOY))
+        np.save(self._file(name, "orig"), orig_idx)
+        info = ShardInfo(name=name, kind=kind, rows=n)
+        self.manifest["shards"].append(dataclasses.asdict(info))
+        if kind == TARGET:
+            self.manifest["n_targets"] = self.n_targets + n
+        if commit:
+            self._write_manifest()
+        return info
+
+    def commit(self) -> None:
+        """Atomically publish all staged (``commit=False``) shards."""
+        self._write_manifest()
+
+    # -- reads --------------------------------------------------------------
+    def iter_runs(self, *, mmap: bool = True) -> Iterator[LibraryRun]:
+        """Yield shards as sorted :class:`LibraryRun`\\ s in *logical* order:
+        every target shard (in shard order), then every decoy shard.
+
+        Logical order is what makes the stable merge reproduce the
+        all-targets-then-all-decoys concatenated layout of an in-memory
+        build, independent of the physical interleaving appends create.
+        ``orig_idx`` is mapped to the concatenated layout here (decoys get
+        ``n_targets + orig``) using the *current* target count, so appends
+        never invalidate stored sidecars.
+        """
+        mode = "r" if mmap else None
+        n_targets = self.n_targets
+        ordered = ([s for s in self.shards if s.kind == TARGET]
+                   + [s for s in self.shards if s.kind == DECOY])
+        for s in ordered:
+            orig = np.load(self._file(s.name, "orig"), mmap_mode=mode)
+            if s.kind == DECOY:
+                orig = np.asarray(orig) + np.int32(n_targets)
+            yield LibraryRun(
+                hvs=np.load(self._file(s.name, "hvs"), mmap_mode=mode),
+                pmz=np.load(self._file(s.name, "pmz"), mmap_mode=mode),
+                charge=np.load(self._file(s.name, "charge"), mmap_mode=mode),
+                is_decoy=np.load(self._file(s.name, "decoy"), mmap_mode=mode),
+                orig_idx=orig,
+            )
+
+    def load_reference_db(self, *, max_r: int) -> ReferenceDB:
+        """Merge the store's sorted runs into the blocked serving DB.
+
+        Zero encoding work: packed HVs stream straight from the shards
+        (memory-mapped) into the (charge, pmz)-merged blocked layout.
+        """
+        if not self.shards:
+            raise StoreError(f"store at {self.path!r} has no shards "
+                             "(empty, or a crashed first ingest)")
+        return build_reference_db_from_runs(self.iter_runs(), max_r=max_r)

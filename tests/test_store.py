@@ -1,0 +1,276 @@
+"""Near-storage LibraryStore: persistence round-trip, append equivalence,
+manifest validation, and the ingest/serve encode split.
+
+The tentpole guarantees under test:
+  1. ingest -> save -> ``from_store`` yields a bit-identical ReferenceDB and
+     bit-identical SearchResult arrays vs the in-memory pipeline, for both a
+     matrix and a fused backend;
+  2. a store grown by ``append()`` (with different chunk boundaries!) is
+     bit-identical to a one-shot build of the full library;
+  3. serving from a store never re-encodes references — cold start reads
+     packed HVs only;
+  4. config/manifest mismatches and malformed stores are rejected.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import OMSConfig, OMSPipeline, encoding
+from repro.data.spectra import LibraryConfig, SpectraSet, make_dataset
+from repro.store import LibraryStore, StoreConfigError, StoreError
+
+CFG = OMSConfig(dim=512, max_r=64, q_block=8, n_levels=16)
+DB_FIELDS = ("hvs", "pmz", "charge", "is_decoy", "orig_idx",
+             "block_min", "block_max", "block_charge")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _assert_db_equal(a, b):
+    for f in DB_FIELDS:
+        assert (np.asarray(getattr(a, f)) == np.asarray(getattr(b, f))).all(), f
+
+
+def _assert_result_equal(a, b):
+    for f in a._fields:
+        assert (np.asarray(getattr(a, f)) == np.asarray(getattr(b, f))).all(), f
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    ds = make_dataset(LibraryConfig(n_refs=600, n_queries=48, seed=7))
+    pipe = OMSPipeline(CFG, ds.refs, chunk_rows=256)
+    path = str(tmp_path_factory.mktemp("store") / "lib")
+    store = OMSPipeline.ingest(CFG, ds.refs, path, chunk_rows=256)
+    return ds, pipe, path, store
+
+
+def test_store_layout_and_manifest(setup):
+    ds, pipe, path, store = setup
+    assert store.n_targets == 600
+    assert store.n_rows == 1200                       # + decoys
+    assert len(store.shards) == 6                     # 3 target + 3 decoy chunks
+    with open(os.path.join(path, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["format_version"] == 1
+    assert man["dim"] == CFG.dim and man["seed"] == CFG.seed
+    assert sum(s["rows"] for s in man["shards"]) == 1200
+    # every shard row count matches its sidecars (validate() re-checks)
+    LibraryStore.open(path).validate()
+
+
+def test_roundtrip_bitidentical_db(setup):
+    ds, pipe, path, store = setup
+    pipe2 = OMSPipeline.from_store(path, CFG)
+    assert pipe2.n_targets == pipe.n_targets
+    _assert_db_equal(pipe.db, pipe2.db)
+
+
+@pytest.mark.parametrize("backend", ["vpu", "fused_xla"])  # matrix + fused
+def test_roundtrip_bitidentical_search(setup, backend):
+    ds, pipe, path, store = setup
+    pipe2 = OMSPipeline.from_store(path, CFG)
+    out = pipe.search(ds.queries, backend=backend, top_k=2)
+    out2 = pipe2.search(ds.queries, backend=backend, top_k=2)
+    _assert_result_equal(out.result, out2.result)
+    assert int(out.open_fdr.n_accepted) == int(out2.open_fdr.n_accepted)
+
+
+def test_append_matches_oneshot(setup, tmp_path):
+    ds, pipe, path, store = setup
+    n1 = 410   # deliberately not a multiple of chunk_rows
+    first = SpectraSet(*(x[:n1] for x in ds.refs))
+    rest = SpectraSet(*(x[n1:] for x in ds.refs))
+    grown = str(tmp_path / "grown")
+    OMSPipeline.ingest(CFG, first, grown, chunk_rows=128)
+    OMSPipeline.ingest(CFG, rest, grown, chunk_rows=128, append=True)
+    gs = LibraryStore.open(grown)
+    assert gs.n_targets == 600
+    pipe_grown = OMSPipeline.from_store(gs, CFG)
+    _assert_db_equal(pipe.db, pipe_grown.db)          # == one-shot in-memory
+    out = pipe.search(ds.queries)
+    out2 = pipe_grown.search(ds.queries)
+    _assert_result_equal(out.result, out2.result)
+
+
+def test_append_never_rewrites_existing_shards(setup, tmp_path):
+    ds, pipe, path, store = setup
+    first = SpectraSet(*(x[:256] for x in ds.refs))
+    rest = SpectraSet(*(x[256:512] for x in ds.refs))
+    p = str(tmp_path / "s")
+    OMSPipeline.ingest(CFG, first, p, chunk_rows=256)
+    before = {f: os.path.getmtime(os.path.join(p, f))
+              for f in os.listdir(p) if f.endswith(".npy")}
+    OMSPipeline.ingest(CFG, rest, p, chunk_rows=256, append=True)
+    after = {f: os.path.getmtime(os.path.join(p, f)) for f in before}
+    assert before == after
+
+
+def test_config_mismatch_rejected(setup):
+    ds, pipe, path, store = setup
+    import dataclasses
+    for bad in (dict(dim=1024), dict(n_levels=32), dict(bin_size=0.04),
+                dict(seed=1), dict(add_decoys=False)):
+        with pytest.raises(StoreConfigError):
+            OMSPipeline.from_store(path, dataclasses.replace(CFG, **bad))
+    # serving-side knobs are NOT pinned by the manifest
+    pipe2 = OMSPipeline.from_store(path, CFG, backend="fused_xla", top_k=3,
+                                   max_r=128)
+    assert pipe2.cfg.top_k == 3 and pipe2.cfg.max_r == 128
+
+
+def test_malformed_store_rejected(setup, tmp_path):
+    ds, pipe, path, store = setup
+    with pytest.raises(StoreError):
+        LibraryStore.open(str(tmp_path / "nowhere"))
+    # unsupported format version
+    bad = tmp_path / "badver"
+    bad.mkdir()
+    (bad / "manifest.json").write_text(json.dumps(
+        {"format_version": 99, "shards": []}))
+    with pytest.raises(StoreError):
+        LibraryStore.open(str(bad))
+    # truncated shard sidecar caught by validate()
+    import shutil
+    broken = str(tmp_path / "broken")
+    shutil.copytree(path, broken)
+    s0 = LibraryStore.open(path).shards[0].name
+    np.save(os.path.join(broken, f"{s0}.pmz.npy"), np.zeros(3, np.float32))
+    with pytest.raises(StoreError):
+        LibraryStore.open(broken)
+
+
+def test_append_shard_validates_rows(setup, tmp_path):
+    st = LibraryStore.create(str(tmp_path / "v"), dim=512, n_levels=16,
+                             bin_size=0.05, mz_min=200.0, mz_max=2000.0,
+                             seed=0, add_decoys=True)
+    hvs = np.zeros((4, 16), np.uint32)
+    charge = np.full(4, 2, np.int32)
+    orig = np.arange(4, dtype=np.int32)
+    with pytest.raises(StoreError):   # unsorted pmz
+        st.append_shard("target", hvs, np.array([5., 1., 2., 3.], np.float32),
+                        charge, orig)
+    with pytest.raises(StoreError):   # wrong HV width
+        st.append_shard("target", np.zeros((4, 8), np.uint32),
+                        np.arange(4, dtype=np.float32), charge, orig)
+    with pytest.raises(StoreError):   # bad kind
+        st.append_shard("junk", hvs, np.arange(4, dtype=np.float32),
+                        charge, orig)
+
+
+def test_ingest_commits_manifest_once(setup, tmp_path):
+    """A crashed ingest (staged shards, no commit) must leave the store at
+    its prior state; retrying a first ingest over the leftovers works."""
+    p = str(tmp_path / "staged")
+    st = LibraryStore.create(p, dim=512, n_levels=16, bin_size=0.05,
+                             mz_min=200.0, mz_max=2000.0, seed=0,
+                             add_decoys=True)
+    hvs = np.zeros((2, 16), np.uint32)
+    st.append_shard("target", hvs, np.array([1., 2.], np.float32),
+                    np.full(2, 2, np.int32), np.arange(2, dtype=np.int32),
+                    commit=False)
+    # shard files staged on disk, but the published store is still empty
+    assert LibraryStore.open(p).n_rows == 0
+    # a "crashed first ingest" can be retried: create() re-inits empty stores
+    ds, pipe, path, store = setup
+    first = SpectraSet(*(x[:128] for x in ds.refs))
+    st2 = OMSPipeline.ingest(CFG, first, p, chunk_rows=128)
+    assert LibraryStore.open(p).n_rows == st2.n_rows == 256
+    # ...but never a store with committed shards
+    with pytest.raises(StoreError):
+        LibraryStore.create(p, dim=512, n_levels=16, bin_size=0.05,
+                            mz_min=200.0, mz_max=2000.0, seed=0,
+                            add_decoys=True)
+
+
+def test_store_package_imports_standalone():
+    """`import repro.store` first (before repro.core) must not cycle."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.store import LibraryStore, TARGET; print('IMPORT_OK')"],
+        capture_output=True, text=True, timeout=120, env=env)
+    assert r.returncode == 0, r.stderr
+    assert "IMPORT_OK" in r.stdout
+
+
+def test_empty_store_raises_store_error(tmp_path):
+    p = str(tmp_path / "empty")
+    LibraryStore.create(p, dim=512, n_levels=16, bin_size=0.05, mz_min=200.0,
+                        mz_max=2000.0, seed=0, add_decoys=True)
+    with pytest.raises(StoreError):
+        OMSPipeline.from_store(p, CFG)
+
+
+def test_merge_sorted_runs_matches_lexsort():
+    """Tournament merge == stable lexsort of the runs' concatenation."""
+    from repro.core.blocking import merge_sorted_runs
+
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        n_runs = int(rng.integers(1, 9))
+        runs = [np.sort(rng.choice(np.arange(40.0), size=rng.integers(0, 60)))
+                for _ in range(n_runs)]        # heavy ties on purpose
+        run_id, row = merge_sorted_runs(runs)
+        concat = np.concatenate(runs) if runs else np.zeros(0)
+        order = np.argsort(concat, kind="stable")
+        starts = np.cumsum([0] + [len(r) for r in runs[:-1]])
+        want_run = np.searchsorted(starts, order, side="right") - 1
+        want_row = order - starts[want_run]
+        assert (run_id == want_run).all() and (row == want_row).all()
+
+
+def test_cold_start_never_encodes_references(setup, monkeypatch):
+    """from_store + search must touch encode only for the query batch."""
+    ds, pipe, path, store = setup
+    calls = []
+    real = encoding.encode_spectra_batched
+
+    def spy(spectra, cb, batch=512):
+        calls.append(spectra.bins.shape[0])
+        return real(spectra, cb, batch)
+
+    monkeypatch.setattr(encoding, "encode_spectra_batched", spy)
+    pipe2 = OMSPipeline.from_store(path, CFG)
+    assert calls == []                       # cold start: zero encode calls
+    pipe2.search(ds.queries)
+    assert calls == [ds.queries.mz.shape[0]]  # exactly one, for the queries
+
+
+def test_fresh_process_cold_start(setup):
+    """Build here, search in a new interpreter: results match bit-for-bit."""
+    ds, pipe, path, store = setup
+    out = pipe.search(ds.queries)
+    want = np.asarray(out.result.open_idx).tolist()
+    code = f"""
+import json, numpy as np
+from repro.core import OMSConfig, OMSPipeline
+from repro.data.spectra import LibraryConfig, make_dataset
+ds = make_dataset(LibraryConfig(n_refs=600, n_queries=48, seed=7))
+cfg = OMSConfig(dim=512, max_r=64, q_block=8, n_levels=16)
+pipe = OMSPipeline.from_store({path!r}, cfg)
+out = pipe.search(ds.queries)
+print("RESULT=" + json.dumps(np.asarray(out.result.open_idx).tolist()))
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=560, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    got = json.loads(r.stdout.split("RESULT=")[1])
+    assert got == want
+
+
+def test_sharded_db_from_store(setup):
+    """Store shards map onto mesh slabs: same DB the sharded search pads to."""
+    import jax
+
+    from repro.core.blocking import shard_reference_db
+    from repro.distributed.collectives import sharded_db_from_store
+
+    ds, pipe, path, store = setup
+    mesh = jax.make_mesh((1,), ("model",))
+    db = sharded_db_from_store(LibraryStore.open(path), mesh, max_r=CFG.max_r)
+    _assert_db_equal(db, shard_reference_db(pipe.db, 1))
