@@ -1,6 +1,7 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing + CSV emission (+ JSON export)."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -28,3 +29,14 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 
 def header():
     print("name,us_per_call,derived")
+
+
+def write_json(path: str) -> None:
+    """Write every row emitted so far as structured JSON (the machine-
+    readable perf trajectory: BENCH_*.json artifacts diff across PRs).
+    CSV stdout is unchanged — this is an additional sink."""
+    data = [{"name": n, "us_per_call": round(u, 1), "derived": d}
+            for n, u, d in ROWS]
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")

@@ -1,0 +1,93 @@
+"""Encoder hot-path throughput: every registered encode backend, two scales.
+
+After PR 2 removed reference re-encoding from serving, query/ingest
+*encoding* is the dominant unoptimised cost. This benchmark times the full
+preprocess->encode path (`encode_backends.preprocess_encode`, the exact
+production entry point) per backend and, like fused_vs_matrix does for
+search, walks the traced jaxpr to report the peak intermediate each backend
+materialises outside a Pallas kernel:
+
+  * ``oracle``     — unpacked (batch, P, D) bit tensor;
+  * ``word_tiled`` — bounded (batch, P, WT*32) tile;
+  * ``pallas``     — VMEM word tiles only (interpret-mode timing off-TPU is
+                     NOT representative; the memory story is exact);
+  * ``fused``      — preprocess+encode in one jit (no HBM round-trip
+                     between the stages).
+
+Rows land in the common CSV and, via ``benchmarks/run.py --only encode
+--json BENCH_encode.json``, in the machine-readable perf-trajectory
+artifact. Scales (and dim / chunk batch) can be overridden for smoke runs;
+the chunk batch is clamped to the scale so tiny runs never zero-pad up to a
+full 512-row chunk:
+
+    BENCH_ENCODE_SCALES=64x32,128x64 BENCH_ENCODE_DIM=512 \\
+        PYTHONPATH=src python -m benchmarks.run --only encode --json out.json
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from benchmarks.fused_vs_matrix import max_intermediate_bytes
+from repro.core import encode_backends
+from repro.core.encoding import PreprocessParams, make_codebooks
+
+DIM = int(os.environ.get("BENCH_ENCODE_DIM", 4096))
+N_LEVELS = 32
+PP = PreprocessParams(bin_size=0.05, mz_min=200.0, mz_max=2000.0,
+                      n_levels=N_LEVELS)
+ENCODE_BATCH = int(os.environ.get("BENCH_ENCODE_BATCH", 512))
+
+
+def _scales() -> list[tuple[int, int]]:
+    """(n_spectra, n_peaks) pairs; env BENCH_ENCODE_SCALES="BxP,BxP"."""
+    spec = os.environ.get("BENCH_ENCODE_SCALES", "512x64,2048x128")
+    return [tuple(int(v) for v in s.split("x")) for s in spec.split(",")]
+
+
+def _raw_batch(rng: np.random.Generator, B: int, P: int):
+    mz = rng.uniform(PP.mz_min, PP.mz_max, (B, P)).astype(np.float32)
+    inten = rng.gamma(2.0, 1.0, (B, P)).astype(np.float32)
+    pmz = rng.uniform(400.0, 1800.0, (B,)).astype(np.float32)
+    charge = rng.integers(2, 4, (B,)).astype(np.int32)
+    return jax.device_put(mz), jax.device_put(inten), \
+        jax.device_put(pmz), jax.device_put(charge)
+
+
+def main() -> None:
+    n_bins = int(round((PP.mz_max - PP.mz_min) / PP.bin_size))
+    cb = make_codebooks(jax.random.PRNGKey(0), n_bins=n_bins,
+                        n_levels=N_LEVELS, dim=DIM)
+    rng = np.random.default_rng(0)
+
+    for B, P in _scales():
+        mz, inten, pmz, charge = _raw_batch(rng, B, P)
+        moved = (mz.size + inten.size) * 4 + B * (DIM // 8)  # raw in + packed out
+        # Never zero-pad a tiny scale up to a full 512-row chunk — the
+        # smoke sizes must measure the workloads they name.
+        batch = min(ENCODE_BATCH, B)
+
+        base_t = None
+        ordered = ["oracle"] + [n for n in encode_backends.names()
+                                if n != "oracle"]
+        for name in ordered:
+            def run(backend=name):
+                return encode_backends.preprocess_encode(
+                    mz, inten, pmz, charge, cb, PP, backend=backend,
+                    batch=batch)
+
+            t = timeit(run)
+            peak = max_intermediate_bytes(jax.make_jaxpr(run)())
+            if name == "oracle":
+                base_t = t
+            emit(f"encode/{B}x{P}/{name}", t * 1e6,
+                 f"{B / t:.0f} sp/s ({base_t / t:.2f}x oracle); "
+                 f"peak intermediate {peak / 2**20:.1f}MiB; "
+                 f"moved {moved / 2**20:.1f}MiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,12 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit);
+``--json OUT.json`` additionally writes the same rows as structured JSON
+(e.g. ``--only encode --json BENCH_encode.json`` — the tracked perf
+trajectory artifact).
 
     PYTHONPATH=src python -m benchmarks.run [--only table1,fig5,...]
+                                            [--json OUT.json]
 """
 from __future__ import annotations
 
@@ -21,6 +25,7 @@ MODULES = [
     ("fig6cd", "benchmarks.fig6_data_movement"),
     ("fusedvm", "benchmarks.fused_vs_matrix"),
     ("ingest", "benchmarks.ingest_throughput"),
+    ("encode", "benchmarks.encode_throughput"),
     ("energy", "benchmarks.energy_model"),
     ("roofline", "benchmarks.roofline"),
 ]
@@ -31,8 +36,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: "
                          + ",".join(k for k, _ in MODULES))
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="also write the emitted rows as structured JSON")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only else None
+    if wanted:
+        unknown = wanted - {k for k, _ in MODULES}
+        if unknown:  # a typo'd key would otherwise "pass" with 0 rows
+            ap.error(f"unknown --only key(s): {', '.join(sorted(unknown))}")
 
     common.header()
     failures = 0
@@ -45,7 +56,10 @@ def main() -> None:
         except Exception:
             failures += 1
             traceback.print_exc()
-            print(f"{key},0.0,ERROR")
+            # through emit() so the ERROR sentinel reaches --json too
+            common.emit(key, 0.0, "ERROR")
+    if args.json:
+        common.write_json(args.json)
     if failures:
         sys.exit(1)
 

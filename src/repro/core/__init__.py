@@ -1,9 +1,10 @@
 """The paper's contribution: HD encoding + blocked open-modification search."""
-from repro.core import backends
+from repro.core import backends, encode_backends
 from repro.core.blocking import (LibraryRun, ReferenceDB, build_reference_db,
                                  build_reference_db_from_runs, merge_sorted_runs,
                                  shard_reference_db)
-from repro.core.encoding import Codebooks, make_codebooks, preprocess_spectra, encode_spectra
+from repro.core.encoding import (Codebooks, PreprocessParams, make_codebooks,
+                                 preprocess_spectra, encode_spectra)
 from repro.core.fdr import fdr_filter
 from repro.core.pipeline import OMSConfig, OMSPipeline
 from repro.core.search import SearchParams, SearchResult, oms_search, plan_search

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import decoys as decoys_mod
-from repro.core import encoding
+from repro.core import encode_backends, encoding
 from repro.core.blocking import (LibraryRun, ReferenceDB,
                                  build_reference_db_from_runs)
 from repro.core.fdr import FDRResult, fdr_filter
@@ -59,6 +59,11 @@ class OMSConfig:
     add_decoys: bool = True
     backend: str = "vpu"         # any name in repro.core.backends.names()
     top_k: int = 1               # ranked winners per query and window
+    # Encoder hot path: any name in repro.core.encode_backends.names().
+    # All encode backends are bit-identical; the knob only picks the
+    # schedule (and its peak intermediate footprint / throughput).
+    encode_backend: str = "word_tiled"
+    encode_batch: int = 512      # spectra per encode chunk (memory bound)
     seed: int = 0
 
     @property
@@ -68,6 +73,12 @@ class OMSConfig:
     @property
     def n_words(self) -> int:
         return self.dim // 32
+
+    @property
+    def preprocess_params(self) -> encoding.PreprocessParams:
+        return encoding.PreprocessParams(
+            bin_size=self.bin_size, mz_min=self.mz_min, mz_max=self.mz_max,
+            n_levels=self.n_levels)
 
 
 class OMSOutput(NamedTuple):
@@ -105,7 +116,9 @@ def _encode_library_runs(
     Yields ``(kind, hvs, pmz, charge, tgt_idx)`` numpy chunks — every target
     chunk first, then (if ``cfg.add_decoys``) every decoy chunk — each
     sorted by (charge, pmz), i.e. ready to be a store shard or a merge run.
-    Host memory is bounded by one chunk of encode intermediates at a time.
+    Host memory is bounded by one chunk of encode intermediates at a time;
+    preprocess+encode dispatch through ``cfg.encode_backend`` (bit-identical
+    across backends, so shards are byte-identical no matter which wrote them).
 
     Per-row determinism (encoding touches only its own row; decoy peaks are
     keyed by global target index ``tgt_offset + row``) makes the output
@@ -122,14 +135,13 @@ def _encode_library_runs(
                 mz, inten = decoys_mod.make_decoy_peaks(
                     k_dec, mz, inten, cfg.mz_min, cfg.mz_max,
                     row_offset=tgt_offset + s)
-            pre = encoding.preprocess_spectra(
-                mz, inten, refs.pmz[s:e], refs.charge[s:e],
-                bin_size=cfg.bin_size, mz_min=cfg.mz_min, mz_max=cfg.mz_max,
-                n_levels=cfg.n_levels)
-            hvs = np.asarray(encoding.encode_spectra_batched(
-                pre, codebooks, batch=encode_batch))
-            pmz = np.asarray(pre.pmz, dtype=np.float32)
-            charge = np.asarray(pre.charge, dtype=np.int32)
+            hvs_j, pmz_j, charge_j = encode_backends.preprocess_encode(
+                mz, inten, refs.pmz[s:e], refs.charge[s:e], codebooks,
+                cfg.preprocess_params, backend=cfg.encode_backend,
+                batch=encode_batch)
+            hvs = np.asarray(hvs_j)
+            pmz = np.asarray(pmz_j, dtype=np.float32)
+            charge = np.asarray(charge_j, dtype=np.int32)
             order = np.lexsort((pmz, charge))
             tgt_idx = (tgt_offset + s + order).astype(np.int32)
             yield kind, hvs[order], pmz[order], charge[order], tgt_idx
@@ -139,7 +151,8 @@ class OMSPipeline:
     """Stateful pipeline: holds codebooks + the blocked reference DB."""
 
     def __init__(self, cfg: OMSConfig, refs: SpectraSet, *,
-                 encode_batch: int = 512, chunk_rows: int = 4096):
+                 encode_batch: int | None = None, chunk_rows: int = 4096):
+        encode_batch = cfg.encode_batch if encode_batch is None else encode_batch
         self.cfg = cfg
         _, k_dec = _derive_keys(cfg)
         self.codebooks = _make_codebooks(cfg)
@@ -164,7 +177,7 @@ class OMSPipeline:
     # ------------------------------------------------------------------
     @classmethod
     def ingest(cls, cfg: OMSConfig, refs: SpectraSet, store_path: str, *,
-               encode_batch: int = 512, chunk_rows: int = 4096,
+               encode_batch: int | None = None, chunk_rows: int = 4096,
                append: bool = False) -> LibraryStore:
         """Encode ``refs`` chunk-by-chunk into an on-disk LibraryStore.
 
@@ -192,6 +205,8 @@ class OMSPipeline:
             tgt_offset = 0
         _, k_dec = _derive_keys(cfg)
         codebooks = _make_codebooks(cfg)
+        if encode_batch is None:
+            encode_batch = cfg.encode_batch
         for kind, hvs, pmz, charge, tgt_idx in _encode_library_runs(
                 cfg, codebooks, k_dec, refs, encode_batch=encode_batch,
                 chunk_rows=chunk_rows, tgt_offset=tgt_offset):
@@ -212,7 +227,9 @@ class OMSPipeline:
         fields (:class:`repro.store.StoreConfigError` otherwise); when
         omitted, a config is reconstructed from the manifest and
         ``overrides`` may set serving-side knobs (``backend``, ``top_k``,
-        ``max_r``, ...).
+        ``max_r``, ``encode_backend``, ``encode_batch``, ...) — encode
+        backends are bit-identical, so query encoding stays
+        search-compatible with any store.
         """
         from repro.store import LibraryStore
         if not isinstance(store, LibraryStore):
@@ -232,12 +249,10 @@ class OMSPipeline:
 
     # ------------------------------------------------------------------
     def encode_queries(self, queries: SpectraSet) -> tuple[jax.Array, jax.Array, jax.Array]:
-        pre = encoding.preprocess_spectra(
+        return encode_backends.preprocess_encode(
             queries.mz, queries.intensity, queries.pmz, queries.charge,
-            bin_size=self.cfg.bin_size, mz_min=self.cfg.mz_min,
-            mz_max=self.cfg.mz_max, n_levels=self.cfg.n_levels)
-        hvs = encoding.encode_spectra_batched(pre, self.codebooks)
-        return hvs, pre.pmz, pre.charge
+            self.codebooks, self.cfg.preprocess_params,
+            backend=self.cfg.encode_backend, batch=self.cfg.encode_batch)
 
     def search_params(self, q_pmz, q_charge, *, exhaustive=False,
                       open_tol_da=None, backend=None,

@@ -238,21 +238,25 @@ def oms_search(db: ReferenceDB, q_hvs: jax.Array, q_pmz: jax.Array,
     sel = jnp.asarray(sel_np)
     real = jnp.asarray(real_np)
 
-    qh = q_hvs[order][sel]
-    qp = q_pmz[order][sel]
-    qc = q_charge[order][sel]
+    # Compose sort + pad into ONE gather per array (order[sel] is a cheap
+    # (Qp,) index op) — a single pass over the query HVs instead of two.
+    gather = order[sel]
+    qh = q_hvs[gather]
+    qp = q_pmz[gather]
+    qc = q_charge[gather]
     # Padding queries keep their charge (so the block is charge-pure) but are
     # discarded on output.
 
     std_b, std_row, open_b, open_row = _search_sorted_padded(
         db, qh, qp, qc, params=params, dim=dim)
 
-    # Drop padding rows, restore original query order.
+    # Drop padding rows, restore original query order — same composed-gather
+    # trick on the way out (keep[inv] maps original row -> padded row).
     keep = jnp.flatnonzero(real, size=Q)
-    inv = jnp.argsort(order)
+    unpad = keep[jnp.argsort(order)]
 
     def _restore(x):
-        return x[keep][inv]
+        return x[unpad]
 
     std_b, std_row = _restore(std_b), _restore(std_row)
     open_b, open_row = _restore(open_b), _restore(open_row)

@@ -9,9 +9,9 @@ Three entry points:
   * legacy one-shot (no subcommand): in-memory ingest + search, as before.
 
     PYTHONPATH=src python -m repro.launch.oms build --store /tmp/oms \\
-        --refs 8192 [--dim 4096] [--append]
+        --refs 8192 [--dim 4096] [--append] [--encode-backend pallas]
     PYTHONPATH=src python -m repro.launch.oms search --store /tmp/oms \\
-        --queries 512 [--backend fused] [--top-k 4]
+        --queries 512 [--backend fused] [--top-k 4] [--encode-backend fused]
     PYTHONPATH=src python -m repro.launch.oms --refs 8192 --queries 512 \\
         [--backend vpu|mxu|kernel_vpu|kernel_mxu|fused|fused_xla]
 """
@@ -23,7 +23,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import OMSConfig, OMSPipeline, backends
+from repro.core import OMSConfig, OMSPipeline, backends, encode_backends
 from repro.core.blocking import candidate_block_stats
 from repro.data.spectra import LibraryConfig, make_dataset
 
@@ -38,6 +38,18 @@ def _encoding_args(ap):
     ap.add_argument("--dim", type=int, default=4096)
     ap.add_argument("--n-levels", type=int, default=32)
     _dataset_args(ap)
+
+
+def _encode_backend_args(ap):
+    """Encoder hot-path knobs — on build (ingest encode) AND search (query
+    encode); all encode backends are bit-identical, only speed/memory differ."""
+    ap.add_argument("--encode-backend", default="word_tiled",
+                    choices=encode_backends.names(),
+                    help="'word_tiled' bounds the unpacked intermediate; "
+                         "'pallas' is the VMEM-tiled kernel; 'fused' runs "
+                         "preprocess+encode in one jit")
+    ap.add_argument("--encode-batch", type=int, default=512,
+                    help="spectra per encode chunk (memory bound)")
 
 
 def _serving_args(ap):
@@ -65,9 +77,13 @@ def _serve(pipe: OMSPipeline, ds, args) -> None:
     """Encode the query batch ONCE; search and block stats reuse it."""
     t0 = time.perf_counter()
     hvs, q_pmz, q_charge = pipe.encode_queries(ds.queries)
+    jax.block_until_ready(hvs)
+    t_encode = time.perf_counter() - t0
+    t0 = time.perf_counter()
     out = pipe.search_encoded(hvs, q_pmz, q_charge, exhaustive=args.exhaustive)
     jax.block_until_ready(out.result)
     t_search = time.perf_counter() - t0
+    t_total = t_encode + t_search
 
     src = np.asarray(ds.query_source)
     open_idx = np.asarray(out.result.open_idx)   # (Q, top_k)
@@ -77,10 +93,14 @@ def _serve(pipe: OMSPipeline, ds, args) -> None:
                                   np.asarray(q_charge), args.open_tol)
 
     cfg = pipe.cfg
-    print(f"[oms] searched {args.queries} queries in {t_search:.2f}s "
-          f"({args.queries / t_search:.0f} q/s, backend={cfg.backend}, "
+    print(f"[oms] searched {args.queries} queries in {t_total:.2f}s "
+          f"({args.queries / t_total:.0f} q/s, backend={cfg.backend}, "
           f"top_k={cfg.top_k}, "
           f"{'exhaustive' if args.exhaustive else 'blocked'})")
+    print(f"[oms] stage split: encode {t_encode:.2f}s "
+          f"({args.queries / t_encode:.0f} sp/s, "
+          f"encode_backend={cfg.encode_backend}) | search {t_search:.2f}s "
+          f"({100 * t_encode / t_total:.0f}% / {100 * t_search / t_total:.0f}%)")
     print(f"[oms] comparisons reduction at +/-{args.open_tol} Da: "
           f"{stats['reduction']:.2f}x vs exhaustive")
     print(f"[oms] open-search recall@1:     {np.mean(open_idx[:, 0] == src):.3f} "
@@ -107,9 +127,12 @@ def cmd_build(argv) -> None:
     ap.add_argument("--append", action="store_true",
                     help="grow an existing store (new shards only)")
     _encoding_args(ap)
+    _encode_backend_args(ap)
     args = ap.parse_args(argv)
 
-    cfg = OMSConfig(dim=args.dim, n_levels=args.n_levels)
+    cfg = OMSConfig(dim=args.dim, n_levels=args.n_levels,
+                    encode_backend=args.encode_backend,
+                    encode_batch=args.encode_batch)
     ds = _dataset(args)
     t0 = time.perf_counter()
     store = OMSPipeline.ingest(cfg, ds.refs, args.store,
@@ -129,12 +152,14 @@ def cmd_search(argv) -> None:
     # `search --store S` matches the `build` that produced S.
     _dataset_args(ap, refs_default=None)
     _serving_args(ap)
+    _encode_backend_args(ap)
     args = ap.parse_args(argv)
 
     t0 = time.perf_counter()
     pipe = OMSPipeline.from_store(
         args.store, max_r=args.max_r, q_block=args.q_block,
-        open_tol_da=args.open_tol, backend=args.backend, top_k=args.top_k)
+        open_tol_da=args.open_tol, backend=args.backend, top_k=args.top_k,
+        encode_backend=args.encode_backend, encode_batch=args.encode_batch)
     t_load = time.perf_counter() - t0
     print(f"[oms search] cold-started {pipe.db.n_rows} rows "
           f"({pipe.db.n_blocks} blocks of {pipe.cfg.max_r}) from {args.store} "
@@ -150,11 +175,14 @@ def cmd_oneshot(argv) -> None:
     ap = argparse.ArgumentParser(prog="repro.launch.oms")
     _encoding_args(ap)
     _serving_args(ap)
+    _encode_backend_args(ap)
     args = ap.parse_args(argv)
 
     cfg = OMSConfig(dim=args.dim, n_levels=args.n_levels, max_r=args.max_r,
                     q_block=args.q_block, open_tol_da=args.open_tol,
-                    backend=args.backend, top_k=args.top_k)
+                    backend=args.backend, top_k=args.top_k,
+                    encode_backend=args.encode_backend,
+                    encode_batch=args.encode_batch)
     ds = _dataset(args)
     t0 = time.perf_counter()
     pipe = OMSPipeline(cfg, ds.refs)

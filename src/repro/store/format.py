@@ -4,7 +4,12 @@
 (the reader) both need these; keeping them in a module that imports nothing
 from ``repro.core`` is what breaks the pipeline <-> store import cycle.
 """
-FORMAT_VERSION = 1
+# v2: m/z binning multiplies by a host-computed 1/bin_size instead of
+# dividing (so eager and fused-jit preprocessing agree bit-for-bit); peaks
+# sitting exactly on bin boundaries can land one bin over vs v1, so v1
+# stores' HVs are not query-compatible with this build and must be
+# re-ingested — the version gate turns silent drift into a loud error.
+FORMAT_VERSION = 2
 
 TARGET = "target"
 DECOY = "decoy"

@@ -1,0 +1,189 @@
+"""Every registered encode backend must be BIT-exact vs the oracle —
+ties, masked rows, padding — so LibraryStore ingests are byte-identical
+no matter which backend wrote them."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encode_backends
+from repro.core.encoding import (PreprocessParams, PreprocessedSpectra,
+                                 encode_spectra, encode_spectra_batched,
+                                 encode_spectra_word_tiled, make_codebooks)
+
+PP = PreprocessParams(bin_size=1.0, mz_min=200.0, mz_max=2000.0, n_levels=8)
+
+ALL = encode_backends.names()
+ENCODE_KIND = encode_backends.names(encode_backends.ENCODE)
+
+
+def _cb(dim, n_levels=8, n_bins=1800, seed=0):
+    return make_codebooks(jax.random.PRNGKey(seed), n_bins=n_bins,
+                          n_levels=n_levels, dim=dim)
+
+
+def _raw(rng, B, P):
+    """Raw peak batch incl. padded (zero-intensity) trailing peaks."""
+    mz = rng.uniform(PP.mz_min, PP.mz_max, (B, P)).astype(np.float32)
+    inten = rng.gamma(2.0, 1.0, (B, P)).astype(np.float32)
+    inten[:, P - 2:] = 0.0  # padded peak slots
+    pmz = rng.uniform(400.0, 1800.0, (B,)).astype(np.float32)
+    charge = rng.integers(2, 4, (B,)).astype(np.int32)
+    return mz, inten, pmz, charge
+
+
+def _encode_via(backend, raw, cb, batch):
+    mz, inten, pmz, charge = (jnp.asarray(x) for x in raw)
+    hvs, qp, qc = encode_backends.preprocess_encode(
+        mz, inten, pmz, charge, cb, PP, backend=backend, batch=batch)
+    return np.asarray(hvs), np.asarray(qp), np.asarray(qc)
+
+
+@pytest.mark.parametrize("backend", [n for n in ALL if n != "oracle"])
+@pytest.mark.parametrize("B,P,W,batch", [
+    (23, 17, 7, 8),    # nothing divides: B % batch, W % word_tile
+    (16, 33, 8, 16),   # aligned rows, odd peak count
+    (3, 5, 2, 512),    # batch far larger than the batch size
+])
+def test_backend_bit_exact_from_raw(backend, B, P, W, batch):
+    """Full preprocess->encode parity with the oracle from raw peaks."""
+    cb = _cb(W * 32)
+    raw = _raw(np.random.default_rng(B * P), B, P)
+    want = _encode_via("oracle", raw, cb, batch)
+    got = _encode_via(backend, raw, cb, batch)
+    for w, g in zip(want, got):
+        assert (w == g).all()
+
+
+@pytest.mark.parametrize("backend", [n for n in ALL if n != "oracle"])
+def test_backend_bit_exact_on_bin_boundary_peaks(backend):
+    """Peaks sitting exactly on the k*bin_size grid — the scenario the
+    host-hoisted bin reciprocal (and the v2 store format bump) exist for:
+    eager and fused-jit binning must agree on these, not just on random
+    off-grid m/z values."""
+    pp = PreprocessParams(bin_size=0.05, mz_min=200.0, mz_max=2000.0,
+                          n_levels=8)
+    n_bins = int(round((pp.mz_max - pp.mz_min) / pp.bin_size))
+    cb = make_codebooks(jax.random.PRNGKey(3), n_bins=n_bins, n_levels=8,
+                        dim=128)
+    rng = np.random.default_rng(3)
+    B, P = 11, 13
+    k = rng.integers(0, n_bins, (B, P))
+    mz = (pp.mz_min + k * pp.bin_size).astype(np.float32)   # on-grid values
+    inten = rng.gamma(2.0, 1.0, (B, P)).astype(np.float32)
+    pmz = rng.uniform(400.0, 1800.0, (B,)).astype(np.float32)
+    charge = rng.integers(2, 4, (B,)).astype(np.int32)
+
+    def enc(name):
+        hvs, qp, qc = encode_backends.preprocess_encode(
+            jnp.asarray(mz), jnp.asarray(inten), jnp.asarray(pmz),
+            jnp.asarray(charge), cb, pp, backend=name, batch=4)
+        return np.asarray(hvs)
+
+    assert (enc(backend) == enc("oracle")).all()
+
+
+@pytest.mark.parametrize("backend", [n for n in ENCODE_KIND if n != "oracle"])
+def test_backend_all_masked_spectrum(backend):
+    """Zero surviving peaks: the all-ties majority must resolve to the
+    tiebreak HV on every backend."""
+    cb = _cb(224)  # W=7, not a multiple of the word tile
+    B, P = 4, 6
+    sp = PreprocessedSpectra(jnp.zeros((B, P), jnp.int32),
+                             jnp.zeros((B, P), jnp.int32),
+                             jnp.zeros((B, P), bool), None, None)
+    got = np.asarray(encode_spectra_batched(sp, cb, batch=4, backend=backend))
+    assert (got == np.asarray(cb.tiebreak)).all()
+    assert (got == np.asarray(encode_spectra(sp, cb))).all()
+
+
+@pytest.mark.parametrize("backend", [n for n in ENCODE_KIND if n != "oracle"])
+def test_backend_single_peak_and_exact_ties(backend):
+    """One peak -> the bound HV verbatim; two distinct peaks -> their
+    disagreeing bits are exact majority ties and must take the tiebreak bit."""
+    cb = _cb(128, n_bins=50, n_levels=4)
+    bins = jnp.array([[3, 0], [3, 9]], jnp.int32)
+    levels = jnp.array([[1, 0], [1, 2]], jnp.int32)
+    mask = jnp.array([[True, False], [True, True]])
+    sp = PreprocessedSpectra(bins, levels, mask, None, None)
+    want = np.asarray(encode_spectra(sp, cb))
+    got = np.asarray(encode_spectra_batched(sp, cb, batch=2, backend=backend))
+    assert (got == want).all()
+    # row 0: single peak == bound HV
+    bound = np.asarray(cb.id_hvs[3] ^ cb.level_hvs[1])
+    assert (want[0] == bound).all()
+    # row 1: the two bound HVs disagree somewhere; those bits tie and must
+    # come from the tiebreak HV
+    b2 = np.asarray(cb.id_hvs[9] ^ cb.level_hvs[2])
+    diff = bound ^ b2
+    assert diff.any()
+    tie = np.asarray(cb.tiebreak)
+    assert ((want[1] & diff) == (tie & diff)).all()
+
+
+@pytest.mark.parametrize("word_tile", [1, 3, 5, 8, 64])
+def test_word_tiled_tile_size_invariance(word_tile):
+    """The word tile is a schedule knob, never a results knob — including
+    tiles that don't divide W and tiles larger than W."""
+    cb = _cb(224)  # W = 7
+    rng = np.random.default_rng(7)
+    B, P = 9, 11
+    sp = PreprocessedSpectra(
+        jnp.asarray(rng.integers(0, 1800, (B, P)), dtype=jnp.int32),
+        jnp.asarray(rng.integers(0, 8, (B, P)), dtype=jnp.int32),
+        jnp.asarray(rng.random((B, P)) < 0.8), None, None)
+    want = np.asarray(encode_spectra(sp, cb))
+    got = np.asarray(encode_spectra_word_tiled(sp, cb, word_tile=word_tile))
+    assert (got == want).all()
+
+
+def test_batched_rejects_fused_kind():
+    cb = _cb(64)
+    sp = PreprocessedSpectra(jnp.zeros((2, 3), jnp.int32),
+                             jnp.zeros((2, 3), jnp.int32),
+                             jnp.zeros((2, 3), bool), None, None)
+    with pytest.raises(ValueError, match="fused"):
+        encode_spectra_batched(sp, cb, backend="fused")
+
+
+def test_unknown_backend_lists_registered():
+    with pytest.raises(ValueError, match="oracle"):
+        encode_backends.get("nope")
+
+
+# ---------------------------------------------------------------------------
+# Store ingest: shards must be BYTE-identical across encode backends
+# ---------------------------------------------------------------------------
+
+
+def _store_bytes(store) -> dict[str, bytes]:
+    out = {}
+    for s in store.shards:
+        for part in ("hvs", "pmz", "charge", "decoy", "orig"):
+            p = store._file(s.name, part)
+            with open(p, "rb") as f:
+                out[f"{s.name}.{part}"] = f.read()
+    return out
+
+
+@pytest.mark.parametrize("backend", [n for n in ALL if n != "oracle"])
+def test_store_ingest_byte_identical_across_backends(backend, tmp_path):
+    import dataclasses
+
+    from repro.core import OMSConfig, OMSPipeline
+    from repro.data.spectra import LibraryConfig, make_dataset
+
+    ds = make_dataset(LibraryConfig(n_refs=96, n_queries=4))
+    base = OMSConfig(dim=256, n_levels=8, max_r=64,
+                     encode_backend="oracle", encode_batch=32)
+    oracle = OMSPipeline.ingest(base, ds.refs,
+                                os.fspath(tmp_path / "oracle"), chunk_rows=40)
+    other = OMSPipeline.ingest(dataclasses.replace(base, encode_backend=backend),
+                               ds.refs, os.fspath(tmp_path / backend),
+                               chunk_rows=40)
+    a, b = _store_bytes(oracle), _store_bytes(other)
+    assert a.keys() == b.keys()
+    for k in a:
+        assert a[k] == b[k], f"shard file {k} differs under {backend}"

@@ -19,9 +19,10 @@ import sys
 import numpy as np
 import pytest
 
-from repro.core import OMSConfig, OMSPipeline, encoding
+from repro.core import OMSConfig, OMSPipeline, encode_backends
 from repro.data.spectra import LibraryConfig, SpectraSet, make_dataset
-from repro.store import LibraryStore, StoreConfigError, StoreError
+from repro.store import (FORMAT_VERSION, LibraryStore, StoreConfigError,
+                         StoreError)
 
 CFG = OMSConfig(dim=512, max_r=64, q_block=8, n_levels=16)
 DB_FIELDS = ("hvs", "pmz", "charge", "is_decoy", "orig_idx",
@@ -55,7 +56,7 @@ def test_store_layout_and_manifest(setup):
     assert len(store.shards) == 6                     # 3 target + 3 decoy chunks
     with open(os.path.join(path, "manifest.json")) as f:
         man = json.load(f)
-    assert man["format_version"] == 1
+    assert man["format_version"] == FORMAT_VERSION
     assert man["dim"] == CFG.dim and man["seed"] == CFG.seed
     assert sum(s["rows"] for s in man["shards"]) == 1200
     # every shard row count matches its sidecars (validate() re-checks)
@@ -224,16 +225,20 @@ def test_merge_sorted_runs_matches_lexsort():
 
 
 def test_cold_start_never_encodes_references(setup, monkeypatch):
-    """from_store + search must touch encode only for the query batch."""
+    """from_store + search must touch encode only for the query batch.
+
+    The spy wraps encode_backends.preprocess_encode — the one production
+    entry point for preprocess+encode (the lower-level batched encode is
+    jit-cached, so it is not a reliable call-counting seam)."""
     ds, pipe, path, store = setup
     calls = []
-    real = encoding.encode_spectra_batched
+    real = encode_backends.preprocess_encode
 
-    def spy(spectra, cb, batch=512):
-        calls.append(spectra.bins.shape[0])
-        return real(spectra, cb, batch)
+    def spy(mz, intensity, pmz, charge, cb, pp, **kw):
+        calls.append(mz.shape[0])
+        return real(mz, intensity, pmz, charge, cb, pp, **kw)
 
-    monkeypatch.setattr(encoding, "encode_spectra_batched", spy)
+    monkeypatch.setattr(encode_backends, "preprocess_encode", spy)
     pipe2 = OMSPipeline.from_store(path, CFG)
     assert calls == []                       # cold start: zero encode calls
     pipe2.search(ds.queries)
