@@ -1,8 +1,12 @@
 """Shared benchmark helpers: timing + CSV emission (+ JSON export)."""
 from __future__ import annotations
 
+import functools
 import json
+import os
+import subprocess
 import time
+from datetime import datetime, timezone
 
 import jax
 
@@ -31,11 +35,30 @@ def header():
     print("name,us_per_call,derived")
 
 
+@functools.lru_cache(maxsize=1)
+def _git_rev() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
 def write_json(path: str) -> None:
     """Write every row emitted so far as structured JSON (the machine-
     readable perf trajectory: BENCH_*.json artifacts diff across PRs).
-    CSV stdout is unchanged — this is an additional sink."""
-    data = [{"name": n, "us_per_call": round(u, 1), "derived": d}
+    Each row carries the emitting commit (``git_rev``) and an ISO-8601 UTC
+    ``timestamp`` so artifacts from different runs concatenate into a real
+    time series. CSV stdout is unchanged — this is an additional sink."""
+    rev = _git_rev()
+    stamp = datetime.now(timezone.utc).isoformat(timespec="seconds")
+    data = [{"name": n, "us_per_call": round(u, 1), "derived": d,
+             "git_rev": rev, "timestamp": stamp}
             for n, u, d in ROWS]
     with open(path, "w") as f:
         json.dump(data, f, indent=1)

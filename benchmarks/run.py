@@ -25,6 +25,7 @@ MODULES = [
     ("fig6cd", "benchmarks.fig6_data_movement"),
     ("fusedvm", "benchmarks.fused_vs_matrix"),
     ("ingest", "benchmarks.ingest_throughput"),
+    ("stream", "benchmarks.stream_throughput"),
     ("encode", "benchmarks.encode_throughput"),
     ("energy", "benchmarks.energy_model"),
     ("roofline", "benchmarks.roofline"),

@@ -89,6 +89,49 @@ def build_reference_db(
                           decoy_n[order], order.astype(np.int32), max_r=max_r)
 
 
+def padded_partition_plan(charge_sorted: np.ndarray,
+                          max_r: int) -> tuple[np.ndarray, np.ndarray]:
+    """Row-selection plan that pads every charge partition to a ``max_r``
+    multiple (paper: blocks never straddle charges).
+
+    Input must be (charge, pmz)-sorted. Returns ``(sel, block_charge)``:
+    ``sel`` is (Rp,) int64 source-row indices with -1 on padding rows, and
+    ``block_charge`` is the per-block partition charge (Rp/max_r,) int32.
+    Shared by the resident layout below and the serve-side
+    :class:`repro.serve.StoreLayout`, so both pad identically by
+    construction.
+    """
+    charge_sorted = np.asarray(charge_sorted)
+    charges, counts = np.unique(charge_sorted, return_counts=True)
+    sel_parts: list[np.ndarray] = []
+    b_charge: list[int] = []
+    start = 0
+    for c, n in zip(charges, counts):
+        n = int(n)
+        n_pad = (-n) % max_r
+        sel_parts.append(np.arange(start, start + n, dtype=np.int64))
+        sel_parts.append(np.full((n_pad,), -1, dtype=np.int64))
+        b_charge.extend([int(c)] * ((n + n_pad) // max_r))
+        start += n
+    sel = (np.concatenate(sel_parts) if sel_parts
+           else np.zeros((0,), dtype=np.int64))
+    return sel, np.asarray(b_charge, dtype=np.int32)
+
+
+def block_pmz_ranges(pmz_padded: np.ndarray,
+                     max_r: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-block [min, max] pmz over real rows (PAD rows excluded);
+    (inf, -inf) for all-padding blocks. ``pmz_padded`` length must be a
+    ``max_r`` multiple."""
+    fmax = np.float32(np.finfo(np.float32).max)
+    pb = np.asarray(pmz_padded).reshape(-1, max_r)
+    real = pb < fmax
+    any_real = real.any(axis=1)
+    b_min = np.where(any_real, np.where(real, pb, np.inf).min(axis=1), np.inf)
+    b_max = np.where(any_real, np.where(real, pb, -np.inf).max(axis=1), -np.inf)
+    return b_min.astype(np.float32), b_max.astype(np.float32)
+
+
 def _layout_sorted(hvs_n, pmz_n, charge_n, decoy_n, orig_n, *,
                    max_r: int) -> ReferenceDB:
     """Pad (charge, pmz)-sorted rows per charge partition, emit block metadata.
@@ -96,42 +139,30 @@ def _layout_sorted(hvs_n, pmz_n, charge_n, decoy_n, orig_n, *,
     Inputs must already be sorted by (charge, pmz); ``orig_n`` carries the
     caller's library index per row.
     """
-    W = hvs_n.shape[1]
-    charges = np.unique(charge_n)
-
-    rows_h, rows_p, rows_c, rows_d, rows_o = [], [], [], [], []
-    b_min, b_max, b_charge = [], [], []
-    for c in charges:
-        sel = np.flatnonzero(charge_n == c)  # contiguous run (sorted input)
-        n = len(sel)
-        n_pad = (-n) % max_r
-        ph = np.concatenate([hvs_n[sel], np.zeros((n_pad, W), dtype=hvs_n.dtype)])
-        pp = np.concatenate([pmz_n[sel], np.full((n_pad,), np.float32(np.finfo(np.float32).max))])
-        pc = np.concatenate([charge_n[sel], np.full((n_pad,), -1, dtype=np.int32)])
-        pd = np.concatenate([decoy_n[sel], np.zeros((n_pad,), dtype=bool)])
-        po = np.concatenate([orig_n[sel].astype(np.int32),
-                             np.full((n_pad,), -1, dtype=np.int32)])
-        rows_h.append(ph); rows_p.append(pp); rows_c.append(pc)
-        rows_d.append(pd); rows_o.append(po)
-        nb = (n + n_pad) // max_r
-        for b in range(nb):
-            blk = pp[b * max_r:(b + 1) * max_r]
-            real = blk[blk < np.float32(np.finfo(np.float32).max)]
-            if len(real):
-                b_min.append(float(real.min())); b_max.append(float(real.max()))
-            else:  # all-pad block (only possible when a partition was empty)
-                b_min.append(np.inf); b_max.append(-np.inf)
-            b_charge.append(int(c))
+    sel, b_charge = padded_partition_plan(charge_n, max_r)
+    pad = sel < 0
+    idx = np.where(pad, 0, sel)
+    ph = np.ascontiguousarray(hvs_n[idx])
+    ph[pad] = 0
+    pp = pmz_n[idx].astype(np.float32, copy=True)
+    pp[pad] = np.float32(np.finfo(np.float32).max)
+    pc = charge_n[idx].astype(np.int32, copy=True)
+    pc[pad] = -1
+    pd = decoy_n[idx].astype(bool, copy=True)
+    pd[pad] = False
+    po = orig_n[idx].astype(np.int32, copy=True)
+    po[pad] = -1
+    b_min, b_max = block_pmz_ranges(pp, max_r)
 
     return ReferenceDB(
-        hvs=jnp.asarray(np.concatenate(rows_h)),
-        pmz=jnp.asarray(np.concatenate(rows_p)),
-        charge=jnp.asarray(np.concatenate(rows_c)),
-        is_decoy=jnp.asarray(np.concatenate(rows_d)),
-        orig_idx=jnp.asarray(np.concatenate(rows_o)),
-        block_min=jnp.asarray(np.array(b_min, dtype=np.float32)),
-        block_max=jnp.asarray(np.array(b_max, dtype=np.float32)),
-        block_charge=jnp.asarray(np.array(b_charge, dtype=np.int32)),
+        hvs=jnp.asarray(ph),
+        pmz=jnp.asarray(pp),
+        charge=jnp.asarray(pc),
+        is_decoy=jnp.asarray(pd),
+        orig_idx=jnp.asarray(po),
+        block_min=jnp.asarray(b_min),
+        block_max=jnp.asarray(b_max),
+        block_charge=jnp.asarray(b_charge),
         max_r=max_r,
     )
 
@@ -174,10 +205,15 @@ def composite_sort_key(pmz, charge, *, off: float) -> np.ndarray:
     return c * off + p
 
 
-def _run_sort_keys(runs: Sequence[LibraryRun]) -> list[np.ndarray]:
+def run_sort_keys(runs: Sequence[LibraryRun]) -> list[np.ndarray]:
+    """Composite (charge, pmz) sort keys for each run, on a shared offset.
+    Also used by the serve-side :class:`repro.serve.StoreLayout`."""
     hi = max((float(np.max(r.pmz)) for r in runs if len(r.pmz)), default=0.0)
     off = sort_key_offset(hi)
     return [composite_sort_key(r.pmz, r.charge, off=off) for r in runs]
+
+
+_run_sort_keys = run_sort_keys  # historical internal name
 
 
 def _merge_two(a, b):

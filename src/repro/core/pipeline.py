@@ -12,6 +12,9 @@ hardware splits it:
     packed shards — codebooks regenerated from the manifest seed, blocked
     DB assembled by merging the shards' (charge, pmz)-sorted runs — with
     *zero* reference re-encoding, then ``search()`` encodes only queries.
+    With ``resident=False`` the merged DB never lands on the device: the
+    streaming engine (``repro.serve``) scans the store slab-by-slab with
+    bit-identical results, bounding device memory by the slab size.
 
 Both construction paths run the identical chunked encode, so a reloaded
 store yields bit-identical search results to the in-memory build.
@@ -154,6 +157,7 @@ class OMSPipeline:
                  encode_batch: int | None = None, chunk_rows: int = 4096):
         encode_batch = cfg.encode_batch if encode_batch is None else encode_batch
         self.cfg = cfg
+        self.engine = None          # set by from_store(resident=False)
         _, k_dec = _derive_keys(cfg)
         self.codebooks = _make_codebooks(cfg)
 
@@ -216,7 +220,9 @@ class OMSPipeline:
 
     @classmethod
     def from_store(cls, store: LibraryStore | str | os.PathLike,
-                   cfg: OMSConfig | None = None,
+                   cfg: OMSConfig | None = None, *,
+                   resident: bool = True, slab_rows: int = 1 << 18,
+                   stream_devices=None,
                    **overrides) -> "OMSPipeline":
         """Cold-start a serving pipeline from a persisted store.
 
@@ -230,6 +236,15 @@ class OMSPipeline:
         ``max_r``, ``encode_backend``, ``encode_batch``, ...) — encode
         backends are bit-identical, so query encoding stays
         search-compatible with any store.
+
+        With ``resident=False`` the library is NOT loaded to the device:
+        ``search``/``search_encoded`` transparently run through the
+        streaming :class:`~repro.serve.StreamingEngine`, which scans the
+        store ``slab_rows`` rows at a time (double-buffered slab uploads,
+        cross-slab top-k merge) — bit-identical results, device memory
+        bounded by the slab instead of the library. ``stream_devices``
+        optionally deals the slab stream round-robin across several
+        devices (see ``repro.distributed.collectives``).
         """
         from repro.store import LibraryStore
         if not isinstance(store, LibraryStore):
@@ -242,9 +257,17 @@ class OMSPipeline:
             store.check_config(cfg)
         self = cls.__new__(cls)
         self.cfg = cfg
+        self.engine = None
         self.codebooks = _make_codebooks(cfg)
         self.n_targets = store.n_targets
-        self.db = store.load_reference_db(max_r=cfg.max_r)
+        if resident:
+            self.db = store.load_reference_db(max_r=cfg.max_r)
+        else:
+            from repro.serve import StreamingEngine
+            self.db = None
+            self.engine = StreamingEngine(store, max_r=cfg.max_r,
+                                          slab_rows=slab_rows,
+                                          devices=stream_devices)
         return self
 
     # ------------------------------------------------------------------
@@ -254,11 +277,18 @@ class OMSPipeline:
             self.codebooks, self.cfg.preprocess_params,
             backend=self.cfg.encode_backend, batch=self.cfg.encode_batch)
 
+    @property
+    def _block_meta(self):
+        """Block metadata provider for host-side planning: the resident DB,
+        or the streaming engine's host layout (same arrays, numpy)."""
+        return self.db if self.db is not None else self.engine.layout
+
     def search_params(self, q_pmz, q_charge, *, exhaustive=False,
                       open_tol_da=None, backend=None,
                       top_k=None) -> SearchParams:
         tol = self.cfg.open_tol_da if open_tol_da is None else open_tol_da
-        k = plan_search(self.db, np.asarray(q_pmz), np.asarray(q_charge),
+        k = plan_search(self._block_meta, np.asarray(q_pmz),
+                        np.asarray(q_charge),
                         open_tol_da=tol, q_block=self.cfg.q_block)
         return SearchParams(
             ppm_tol=self.cfg.ppm_tol, open_tol_da=tol,
@@ -280,15 +310,33 @@ class OMSPipeline:
         params = self.search_params(qp_np, qc_np, exhaustive=exhaustive,
                                     open_tol_da=open_tol_da, backend=backend,
                                     top_k=top_k)
-        result = oms_search(self.db, hvs, q_pmz, q_charge, params,
-                            dim=self.cfg.dim, q_pmz_np=qp_np,
-                            q_charge_np=qc_np)
+        if self.engine is not None:
+            result = self.engine.search_encoded(
+                hvs, q_pmz, q_charge, params, dim=self.cfg.dim,
+                q_pmz_np=qp_np, q_charge_np=qc_np)
+            # Decoy flags come from the host layout sidecar — the streamed
+            # serve path never uploads library-sized arrays to the device.
+            isd_np = self.engine.layout.is_decoy
+            n_rows = self.engine.layout.n_rows
 
-        def _fdr(row, sim):
-            valid = row >= 0
-            isd = self.db.is_decoy[jnp.clip(row, 0, self.db.n_rows - 1)] & valid
-            return fdr_filter(sim.astype(jnp.float32), isd, valid,
-                              threshold=self.cfg.fdr_threshold)
+            def _fdr(row, sim):
+                row_h = np.asarray(row)
+                valid = row_h >= 0
+                isd = isd_np[np.clip(row_h, 0, n_rows - 1)] & valid
+                return fdr_filter(jnp.asarray(sim).astype(jnp.float32),
+                                  jnp.asarray(isd), jnp.asarray(valid),
+                                  threshold=self.cfg.fdr_threshold)
+        else:
+            result = oms_search(self.db, hvs, q_pmz, q_charge, params,
+                                dim=self.cfg.dim, q_pmz_np=qp_np,
+                                q_charge_np=qc_np)
+
+            def _fdr(row, sim):
+                valid = row >= 0
+                isd = (self.db.is_decoy[jnp.clip(row, 0, self.db.n_rows - 1)]
+                       & valid)
+                return fdr_filter(sim.astype(jnp.float32), isd, valid,
+                                  threshold=self.cfg.fdr_threshold)
 
         return OMSOutput(
             result=result,

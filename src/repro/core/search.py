@@ -212,6 +212,50 @@ def _padding_plan(q_block: int, group_sizes: tuple[int, ...]):
     return sel, real
 
 
+def validate_search_params(params: SearchParams, n_rows: int | None = None) -> None:
+    """Reject invalid static search settings with a clear error.
+
+    ``top_k < 1`` and ``top_k > n_rows`` used to surface as opaque
+    gather/shape failures deep inside jit; both entry points (resident
+    :func:`oms_search` and the streaming serve engine) call this first.
+    """
+    if params.top_k < 1:
+        raise ValueError(f"SearchParams.top_k must be >= 1, got {params.top_k}")
+    if n_rows is not None and params.top_k > n_rows:
+        raise ValueError(
+            f"SearchParams.top_k={params.top_k} exceeds the reference DB's "
+            f"{n_rows} rows — no query can have that many candidates; "
+            f"lower top_k or grow the library")
+
+
+def sort_pad_plan(q_pmz: jax.Array, q_charge: jax.Array, q_block: int, *,
+                  q_charge_np: np.ndarray | None = None):
+    """Composed sort+pad row-selection for a query batch.
+
+    Sorts queries by (charge, pmz) and pads each charge group to a
+    ``q_block`` multiple so no query block straddles a charge boundary. The
+    plan needs only the per-charge counts (np.unique is ascending, matching
+    the device sort key), so it is cached across calls (`_padding_plan`).
+
+    Returns ``(gather, unpad)`` device index arrays: ``x[gather]`` maps raw
+    query rows into the sorted/padded layout the blocked scan consumes (one
+    gather per array — a single pass over the query HVs), and ``y[unpad]``
+    inverts it on the way out (drops padding rows, restores input order).
+    Shared by the resident ``oms_search`` and the streaming serve engine so
+    both consume literally the same query layout.
+    """
+    Q = q_pmz.shape[0]
+    key = jnp.clip(q_pmz, 0.0, _CHARGE_KEY - 1.0) + q_charge * _CHARGE_KEY
+    order = jnp.argsort(key)
+    qc_np = np.asarray(q_charge if q_charge_np is None else q_charge_np)
+    counts = np.unique(qc_np, return_counts=True)[1]
+    sel_np, real_np = _padding_plan(q_block, tuple(int(c) for c in counts))
+    gather = order[jnp.asarray(sel_np)]
+    keep = jnp.flatnonzero(jnp.asarray(real_np), size=Q)
+    unpad = keep[jnp.argsort(order)]
+    return gather, unpad
+
+
 def oms_search(db: ReferenceDB, q_hvs: jax.Array, q_pmz: jax.Array,
                q_charge: jax.Array, params: SearchParams, *, dim: int,
                q_pmz_np: np.ndarray | None = None,
@@ -223,24 +267,9 @@ def oms_search(db: ReferenceDB, q_hvs: jax.Array, q_pmz: jax.Array,
     precursor arrays; pass them (the pipeline does) to avoid a device->host
     sync when the padding plan is already cached.
     """
-    Q = q_hvs.shape[0]
-    QB = params.q_block
-
-    # Sort queries by (charge, pmz); pad each charge group to a q_block
-    # multiple so no query block straddles a charge boundary. The plan needs
-    # only the per-charge counts (np.unique is ascending, matching the device
-    # sort key), so it is cached across calls.
-    key = jnp.clip(q_pmz, 0.0, _CHARGE_KEY - 1.0) + q_charge * _CHARGE_KEY
-    order = jnp.argsort(key)
-    qc_np = np.asarray(q_charge if q_charge_np is None else q_charge_np)
-    counts = np.unique(qc_np, return_counts=True)[1]
-    sel_np, real_np = _padding_plan(QB, tuple(int(c) for c in counts))
-    sel = jnp.asarray(sel_np)
-    real = jnp.asarray(real_np)
-
-    # Compose sort + pad into ONE gather per array (order[sel] is a cheap
-    # (Qp,) index op) — a single pass over the query HVs instead of two.
-    gather = order[sel]
+    validate_search_params(params, db.n_rows)
+    gather, unpad = sort_pad_plan(q_pmz, q_charge, params.q_block,
+                                  q_charge_np=q_charge_np)
     qh = q_hvs[gather]
     qp = q_pmz[gather]
     qc = q_charge[gather]
@@ -250,11 +279,7 @@ def oms_search(db: ReferenceDB, q_hvs: jax.Array, q_pmz: jax.Array,
     std_b, std_row, open_b, open_row = _search_sorted_padded(
         db, qh, qp, qc, params=params, dim=dim)
 
-    # Drop padding rows, restore original query order — same composed-gather
-    # trick on the way out (keep[inv] maps original row -> padded row).
-    keep = jnp.flatnonzero(real, size=Q)
-    unpad = keep[jnp.argsort(order)]
-
+    # Drop padding rows, restore original query order.
     def _restore(x):
         return x[unpad]
 
@@ -295,7 +320,16 @@ def plan_search(db: ReferenceDB, q_pmz, q_charge, *, open_tol_da: float,
 
     # Vectorised over (q-block, charge) segments: sorted order makes each
     # segment a contiguous run, so its pmz window is [first - tol, last + tol].
-    group = np.arange(Q) // q_block
+    # Grouping must mirror the runtime layout: each charge group is padded to
+    # a q_block multiple (sort_pad_plan), so device q-blocks are aligned to
+    # *charge-run-local* offsets, not to the global query index. Grouping on
+    # the global index used to chop runs differently than the device does and
+    # could understate the worst-case span (k_blocks too small -> silently
+    # missed in-window candidates on charge-boundary-straddling batches).
+    charge_starts = np.flatnonzero(np.r_[True, np.diff(qc) != 0])
+    run_start = np.repeat(charge_starts,
+                          np.diff(np.r_[charge_starts, Q]))
+    group = (np.arange(Q) - run_start) // q_block
     starts = np.flatnonzero(
         np.r_[True, (np.diff(group) != 0) | (np.diff(qc) != 0)])
     ends = np.r_[starts[1:], Q]               # exclusive

@@ -100,6 +100,26 @@ def sharded_search(db: ReferenceDB, q_hvs, q_pmz, q_charge,
 # ---------------------------------------------------------------------------
 
 
+def streaming_engine_for_mesh(store_or_layout, mesh: Mesh, *, max_r: int,
+                              slab_rows: int, model_axis: str = "model",
+                              prefetch: bool = True):
+    """Streaming per-mesh-slab serving: a :class:`~repro.serve.
+    StreamingEngine` whose slab stream is dealt round-robin across the
+    ``model``-axis devices — the multi-SmartSSD scale-out with the library
+    *streamed* instead of slab-resident (`sharded_db_from_store`). Each
+    device scans its slabs independently (async dispatch overlaps them);
+    partial winners merge on the first model-axis device in ascending slab
+    order — the same tie discipline as ``_merge_best`` — so results stay
+    bit-identical to the single-device engine and to a resident search.
+    """
+    from repro.serve import StreamingEngine
+    devs = np.asarray(mesh.devices)
+    axis = list(mesh.axis_names).index(model_axis)
+    devs = np.moveaxis(devs, axis, 0).reshape(mesh.shape[model_axis], -1)[:, 0]
+    return StreamingEngine(store_or_layout, max_r=max_r, slab_rows=slab_rows,
+                           devices=list(devs), prefetch=prefetch)
+
+
 def sharded_db_from_store(store, mesh: Mesh, *, max_r: int,
                           model_axis: str = "model") -> ReferenceDB:
     """Cold-start the sharded serving DB straight from a LibraryStore.

@@ -1,24 +1,43 @@
 """OMS serving launcher — the paper's end-to-end flow as a service.
 
-Three entry points:
+Entry points:
 
-  * ``build``  — ingest: encode a reference library chunk-by-chunk into a
+  * ``build``   — ingest: encode a reference library chunk-by-chunk into a
     persistent sharded LibraryStore (the near-storage step, paid once);
-  * ``search`` — serve: cold-start from the store (packed HVs only, zero
-    reference re-encoding) and run batched query searches;
+  * ``search``  — serve (batch): cold-start from the store (packed HVs
+    only, zero reference re-encoding) and run batched query searches;
+  * ``serve``   — serve (online): JSON-lines request loop on stdio with a
+    micro-batching scheduler; by default the library is NOT device-resident
+    — the streaming engine scans the store one bounded slab at a time;
+  * ``queries`` — emit a synthetic query workload as JSON-lines (pipes into
+    ``serve``);
   * legacy one-shot (no subcommand): in-memory ingest + search, as before.
 
     PYTHONPATH=src python -m repro.launch.oms build --store /tmp/oms \\
         --refs 8192 [--dim 4096] [--append] [--encode-backend pallas]
     PYTHONPATH=src python -m repro.launch.oms search --store /tmp/oms \\
         --queries 512 [--backend fused] [--top-k 4] [--encode-backend fused]
+    PYTHONPATH=src python -m repro.launch.oms queries --refs 8192 \\
+        --queries 512 | PYTHONPATH=src python -m repro.launch.oms serve \\
+        --store /tmp/oms [--slab-rows 262144] [--resident] > results.jsonl
     PYTHONPATH=src python -m repro.launch.oms --refs 8192 --queries 512 \\
         [--backend vpu|mxu|kernel_vpu|kernel_mxu|fused|fused_xla]
+
+``serve`` requests are one JSON object per line:
+``{"id": ..., "pmz": f, "charge": i, "mz": [...], "intensity": [...]}``;
+responses echo the id with the dual-window top-k matches. Responses are
+bit-identical between ``--resident`` and streaming runs and independent of
+micro-batch composition (FDR is a corpus-level statistic over a whole
+batch, so it is reported by ``search``, not per request here).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
+from collections import deque
+from concurrent.futures import Future
 
 import jax
 import numpy as np
@@ -171,6 +190,135 @@ def cmd_search(argv) -> None:
     _serve(pipe, ds, args)
 
 
+def cmd_queries(argv) -> None:
+    """Emit a synthetic query workload as JSON-lines (pipes into `serve`)."""
+    ap = argparse.ArgumentParser(prog="repro.launch.oms queries")
+    ap.add_argument("--queries", type=int, default=512)
+    ap.add_argument("--open-tol", type=float, default=75.0)
+    _dataset_args(ap)
+    args = ap.parse_args(argv)
+
+    qs = _dataset(args).queries
+    mz = np.asarray(qs.mz)
+    inten = np.asarray(qs.intensity)
+    pmz = np.asarray(qs.pmz)
+    charge = np.asarray(qs.charge)
+    for i in range(mz.shape[0]):
+        keep = inten[i] > 0          # drop padding; encode is peak-set based
+        sys.stdout.write(json.dumps(
+            {"id": i, "pmz": float(pmz[i]), "charge": int(charge[i]),
+             "mz": [float(v) for v in mz[i][keep]],
+             "intensity": [float(v) for v in inten[i][keep]]},
+            sort_keys=True, separators=(",", ":")) + "\n")
+
+
+def cmd_serve(argv) -> None:
+    """Online JSON-lines serve loop: micro-batched, streamed by default."""
+    from repro.serve import MicroBatcher, QuerySpec
+
+    ap = argparse.ArgumentParser(prog="repro.launch.oms serve")
+    ap.add_argument("--store", required=True, help="store directory")
+    ap.add_argument("--max-r", type=int, default=1024)
+    ap.add_argument("--q-block", type=int, default=16)
+    ap.add_argument("--open-tol", type=float, default=75.0)
+    ap.add_argument("--backend", default="vpu", choices=backends.names())
+    ap.add_argument("--top-k", type=int, default=1)
+    ap.add_argument("--resident", action="store_true",
+                    help="pin the whole library on device (legacy path) "
+                         "instead of streaming bounded slabs")
+    ap.add_argument("--slab-rows", type=int, default=1 << 18,
+                    help="rows per streamed device slab (the device-memory "
+                         "bound; rounded up to whole blocks)")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="micro-batch coalescing cap (queries per scan)")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="max wait after the first queued query before the "
+                         "coalesced batch is scanned")
+    _encode_backend_args(ap)
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    pipe = OMSPipeline.from_store(
+        args.store, max_r=args.max_r, q_block=args.q_block,
+        open_tol_da=args.open_tol, backend=args.backend, top_k=args.top_k,
+        encode_backend=args.encode_backend, encode_batch=args.encode_batch,
+        resident=args.resident, slab_rows=args.slab_rows)
+    t_load = time.perf_counter() - t0
+    if args.resident:
+        mode = "resident"
+    else:
+        plan = pipe.engine.plan
+        mode = (f"streaming {plan.n_slabs} slabs x {plan.slab_rows} rows "
+                f"({plan.slab_blocks} blocks)")
+    print(f"[oms serve] cold-started {args.store} in {t_load:.2f}s — {mode}; "
+          f"backend={args.backend} top_k={args.top_k} "
+          f"max_batch={args.max_batch} max_wait={args.max_wait_ms}ms",
+          file=sys.stderr, flush=True)
+
+    def run_batch(spectra):
+        out = pipe.search(spectra)
+        r = out.result
+        std_i = np.asarray(r.std_idx); std_s = np.asarray(r.std_sim)
+        opn_i = np.asarray(r.open_idx); opn_s = np.asarray(r.open_sim)
+        return [
+            {"std": {"idx": std_i[i].tolist(), "sim": std_s[i].tolist()},
+             "open": {"idx": opn_i[i].tolist(), "sim": opn_s[i].tolist()}}
+            for i in range(std_i.shape[0])
+        ]
+
+    def emit(rid, fut):
+        # One bad request (or a poisoned micro-batch) answers with an error
+        # object; the serve loop itself must stay up for everyone else.
+        try:
+            payload = fut.result()
+        except Exception as e:
+            payload = {"error": f"{type(e).__name__}: {e}"}
+        sys.stdout.write(json.dumps({"id": rid, **payload}, sort_keys=True,
+                                    separators=(",", ":")) + "\n")
+        sys.stdout.flush()
+
+    pending: deque = deque()
+    n = 0
+    n_bad = 0
+    t0 = time.perf_counter()
+    with MicroBatcher(run_batch, max_batch=args.max_batch,
+                      max_wait_s=args.max_wait_ms / 1e3) as batcher:
+        for line in sys.stdin:
+            line = line.strip()
+            if not line:
+                continue
+            rid = None
+            try:
+                req = json.loads(line)
+                rid = req.get("id")
+                spec = QuerySpec(mz=np.asarray(req["mz"], np.float32),
+                                 intensity=np.asarray(req["intensity"],
+                                                      np.float32),
+                                 pmz=float(req["pmz"]),
+                                 charge=int(req["charge"]))
+                fut = batcher.submit(spec)
+            except Exception as e:      # malformed line: answer, don't die
+                n_bad += 1
+                fut = Future()
+                fut.set_exception(e)
+            pending.append((rid, fut))
+            n += 1
+            while pending and pending[0][1].done():  # stream out, in order
+                emit(*pending.popleft())
+        while pending:
+            emit(*pending.popleft())
+        dt = time.perf_counter() - t0
+        stats = f", {batcher.n_queries / max(batcher.n_batches, 1):.1f} q/batch"
+        if pipe.engine is not None and pipe.engine.last_stats:
+            s = pipe.engine.last_stats
+            stats += (f", last scan {s.n_scanned}/{s.n_slabs} slabs of "
+                      f"{s.slab_rows} rows")
+        bad = f", {n_bad} malformed rejected" if n_bad else ""
+        print(f"[oms serve] answered {n} queries in {dt:.2f}s "
+              f"({n / max(dt, 1e-9):.0f} q/s, {batcher.n_batches} "
+              f"micro-batches{stats}{bad})", file=sys.stderr)
+
+
 def cmd_oneshot(argv) -> None:
     ap = argparse.ArgumentParser(prog="repro.launch.oms")
     _encoding_args(ap)
@@ -199,6 +347,10 @@ def main(argv=None):
         cmd_build(argv[1:])
     elif argv and argv[0] == "search":
         cmd_search(argv[1:])
+    elif argv and argv[0] == "serve":
+        cmd_serve(argv[1:])
+    elif argv and argv[0] == "queries":
+        cmd_queries(argv[1:])
     else:
         cmd_oneshot(argv)
 

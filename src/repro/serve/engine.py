@@ -1,0 +1,189 @@
+"""Streaming shard-search executor: bounded-memory slab scans.
+
+Runs the blocked dual-window OMS scan over a library one fixed-size slab at
+a time. Device memory holds the coalesced query batch, at most TWO slabs
+(the one being searched plus the one being prepared — double buffering: a
+background thread gathers slab N+1 from the mmapped shards while the device
+searches slab N), and the (Q, top_k) running winners; it never holds the
+library. That decouples servable library size from accelerator memory — the
+paper's near-storage streaming, with the slab stream standing in for the
+SmartSSD-to-kernel DMA.
+
+Bit-identity with the resident ``oms_search`` at ANY slab size:
+
+  * queries go through the same ``sort_pad_plan`` layout;
+  * every slab is a contiguous run of whole blocks of the SAME padded
+    global layout (see `slabs.py`), searched by the same jitted
+    ``_search_sorted_padded`` with ``k_blocks`` capped to the slab — each
+    slab's scan covers a superset of its in-window candidates, and masked
+    selection keeps only in-window ones, exactly as the resident scan does;
+  * per-slab winners, offset into the global row space, fold into the
+    running (Q, k) best with ``merge_topk`` in ascending slab order — the
+    same tie-stable (sim desc, row asc) discipline as the mesh-shard merge
+    (`collectives._merge_best`), so on score ties the lower global row
+    keeps winning;
+  * slabs no query's open window touches are skipped (they cannot hold an
+    in-window candidate).
+
+With ``devices=[d0, d1, ...]`` the slab stream is dealt round-robin across
+devices (the per-mesh-slab analogue of the paper's multi-SmartSSD scale-
+out); async dispatch overlaps their scans and partials merge on ``d0``,
+still in ascending slab order.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from functools import partial
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.search import (SearchParams, SearchResult,
+                               _search_sorted_padded, sort_pad_plan,
+                               validate_search_params)
+from repro.kernels.topk import merge_topk
+from repro.serve.slabs import (SlabPlan, StoreLayout, plan_slabs, slab_arrays,
+                               slabs_touched)
+
+
+class StreamStats(NamedTuple):
+    """Per-call scan accounting (exposed for logs/benchmarks)."""
+
+    n_slabs: int       # slabs in the plan
+    n_scanned: int     # slabs actually streamed for this batch
+    slab_rows: int     # rows per slab (the device-memory bound)
+
+
+@jax.jit
+def _offset_rows(std_b, std_row, open_b, open_row, offset):
+    """Map slab-local winner rows into the global padded row space."""
+    return (std_b, jnp.where(std_row >= 0, std_row + offset, -1),
+            open_b, jnp.where(open_row >= 0, open_row + offset, -1))
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _merge_partials(run, part, k: int):
+    """Fold one slab's winners into the running best. ``run`` holds earlier
+    (lower-row) slabs, so it wins score ties — the merge_topk contract."""
+    std_b, std_row = merge_topk(run[0], run[1], part[0], part[1], k)
+    open_b, open_row = merge_topk(run[2], run[3], part[2], part[3], k)
+    return std_b, std_row, open_b, open_row
+
+
+class StreamingEngine:
+    """Executes OMS over a :class:`~repro.store.LibraryStore` (or a
+    prebuilt :class:`StoreLayout`) one bounded slab at a time."""
+
+    def __init__(self, store_or_layout, *, max_r: int, slab_rows: int = 1 << 18,
+                 devices: Sequence | None = None, prefetch: bool = True):
+        if isinstance(store_or_layout, StoreLayout):
+            layout = store_or_layout
+            if layout.max_r != max_r:
+                raise ValueError(f"layout has max_r={layout.max_r}, "
+                                 f"engine asked for {max_r}")
+        else:
+            layout = StoreLayout.from_store(store_or_layout, max_r=max_r)
+        self.layout = layout
+        self.plan: SlabPlan = plan_slabs(layout.n_blocks, max_r=max_r,
+                                         slab_rows=slab_rows)
+        self.devices = list(devices) if devices else None
+        self._prefetch = prefetch
+        self.last_stats: StreamStats | None = None
+
+    # ------------------------------------------------------------------
+    def _device_for(self, j: int):
+        return self.devices[j % len(self.devices)] if self.devices else None
+
+    def _queries_on(self, cache: dict, device, qh, qp, qc):
+        if device is None:
+            return qh, qp, qc
+        if device not in cache:
+            cache[device] = tuple(jax.device_put(x, device)
+                                  for x in (qh, qp, qc))
+        return cache[device]
+
+    # ------------------------------------------------------------------
+    def search_encoded(self, q_hvs, q_pmz, q_charge, params: SearchParams, *,
+                       dim: int, q_pmz_np: np.ndarray | None = None,
+                       q_charge_np: np.ndarray | None = None) -> SearchResult:
+        """Streamed equivalent of :func:`repro.core.search.oms_search` —
+        same inputs, bit-identical :class:`SearchResult`."""
+        validate_search_params(params, self.layout.n_rows)
+        Q, K = q_hvs.shape[0], params.top_k
+        qp_np = np.asarray(q_pmz if q_pmz_np is None else q_pmz_np)
+        qc_np = np.asarray(q_charge if q_charge_np is None else q_charge_np)
+
+        if params.exhaustive:   # the HyperOMS baseline scans everything
+            touched = list(range(self.plan.n_slabs))
+        else:
+            touched = np.flatnonzero(slabs_touched(
+                self.layout, qp_np, qc_np, open_tol_da=params.open_tol_da,
+                plan=self.plan)).tolist()
+        self.last_stats = StreamStats(self.plan.n_slabs, len(touched),
+                                      self.plan.slab_rows)
+
+        gather, unpad = sort_pad_plan(q_pmz, q_charge, params.q_block,
+                                      q_charge_np=qc_np)
+        qh, qp, qc = q_hvs[gather], q_pmz[gather], q_charge[gather]
+        local = params._replace(
+            k_blocks=min(params.k_blocks, self.plan.slab_blocks))
+
+        run = None
+        merge_dev = self.devices[0] if self.devices else None
+        qcache: dict = {}
+        pool = ThreadPoolExecutor(max_workers=1) if (
+            self._prefetch and len(touched) > 1) else None
+        try:
+            nxt = (pool.submit(slab_arrays, self.layout, touched[0], self.plan)
+                   if pool else None)
+            for j, s in enumerate(touched):
+                db_np = nxt.result() if nxt else slab_arrays(
+                    self.layout, s, self.plan)
+                if pool and j + 1 < len(touched):
+                    # double buffer: gather slab j+1 from the mmapped shards
+                    # while the device searches slab j
+                    nxt = pool.submit(slab_arrays, self.layout,
+                                      touched[j + 1], self.plan)
+                else:
+                    nxt = None
+                dev = self._device_for(j)
+                db_dev = (jax.device_put(db_np, dev) if dev is not None
+                          else jax.device_put(db_np))
+                qh_d, qp_d, qc_d = self._queries_on(qcache, dev, qh, qp, qc)
+                out = _search_sorted_padded(db_dev, qh_d, qp_d, qc_d,
+                                            params=local, dim=dim)
+                part = _offset_rows(*out, np.int32(s * self.plan.slab_rows))
+                if merge_dev is not None:
+                    part = jax.device_put(part, merge_dev)
+                run = part if run is None else _merge_partials(run, part, K)
+        finally:
+            if pool:
+                pool.shutdown(wait=False)
+
+        if run is None:          # no slab intersects any query window
+            z = np.full((Q, K), -1, np.int32)
+            return SearchResult(*(jnp.asarray(z),) * 6)
+
+        # Drop padding queries, restore input order, then finalize on host
+        # (orig_idx/is_decoy sidecars never go to the device).
+        unpad_np = np.asarray(unpad)
+        std_b, std_row, open_b, open_row = (np.asarray(x)[unpad_np]
+                                            for x in run)
+        std = self._finalize(std_b, std_row, params.min_sim)
+        opn = self._finalize(open_b, open_row, params.min_sim)
+        return SearchResult(std_idx=std[0], std_sim=std[1],
+                            open_idx=opn[0], open_sim=opn[1],
+                            std_row=std[2], open_row=opn[2])
+
+    def _finalize(self, best, row, min_sim):
+        """Host mirror of ``oms_search``'s finalize: min-sim threshold, map
+        padded rows to original library indices (padding rows carry -1)."""
+        orig, n = self.layout.orig_idx, self.layout.n_rows
+        ok = (best >= min_sim) & (row >= 0)
+        idx = np.where(ok, orig[np.clip(row, 0, n - 1)], -1)
+        ok = ok & (idx >= 0)
+        return (jnp.asarray(np.where(ok, idx, -1).astype(np.int32)),
+                jnp.asarray(np.where(ok, best, -1).astype(np.int32)),
+                jnp.asarray(np.where(ok, row, -1).astype(np.int32)))

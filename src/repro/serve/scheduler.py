@@ -1,0 +1,169 @@
+"""Async micro-batching query frontend.
+
+Request queue -> coalesce (up to ``max_batch`` requests, or ``max_wait_s``
+after the first arrival) -> ONE streamed scan serves the whole coalesced
+batch. Per-query search results are batch-independent (the scan is
+bit-identical under any batch composition), so coalescing never changes an
+answer — it only amortises the slab stream and the jit dispatch across
+concurrent callers, which is where the throughput of a heavy-traffic serve
+loop comes from.
+
+The scheduler is engine-agnostic: it coalesces raw peak lists into one
+padded :class:`~repro.data.spectra.SpectraSet` and hands it to a
+``run_batch`` callable (the launcher wires that to
+``OMSPipeline.search``), which must return one result payload per request.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.data.spectra import SpectraSet
+
+
+@dataclasses.dataclass
+class QuerySpec:
+    """One query spectrum as raw (variable-length) peak arrays."""
+
+    mz: np.ndarray         # (P,) f32 fragment m/z
+    intensity: np.ndarray  # (P,) f32
+    pmz: float             # neutral precursor mass (Da)
+    charge: int
+
+
+def coalesce_queries(specs: Sequence[QuerySpec]) -> SpectraSet:
+    """Pad variable-length peak lists to one (B, P) batch. Zero-intensity
+    padding is what the encoder already treats as "no peak", so padding is
+    encode-neutral."""
+    if not specs:
+        raise ValueError("coalesce_queries: empty batch")
+    P = max(1, max(len(s.mz) for s in specs))
+    B = len(specs)
+    mz = np.zeros((B, P), np.float32)
+    inten = np.zeros((B, P), np.float32)
+    pmz = np.empty((B,), np.float32)
+    charge = np.empty((B,), np.int32)
+    for i, s in enumerate(specs):
+        n = len(s.mz)
+        if n != len(s.intensity):
+            raise ValueError(f"query {i}: mz/intensity length mismatch")
+        mz[i, :n] = np.asarray(s.mz, np.float32)
+        inten[i, :n] = np.asarray(s.intensity, np.float32)
+        pmz[i] = np.float32(s.pmz)
+        charge[i] = np.int32(s.charge)
+    return SpectraSet(mz=mz, intensity=inten, pmz=pmz, charge=charge)
+
+
+_CLOSE = object()
+
+
+class MicroBatcher:
+    """Thread-safe micro-batching front of a batched search function.
+
+    ``run_batch(spectra: SpectraSet) -> Sequence[payload]`` must return one
+    payload per batch row; each :meth:`submit` future resolves to its row's
+    payload (or to the batch's exception).
+    """
+
+    def __init__(self, run_batch: Callable[[SpectraSet], Sequence[Any]], *,
+                 max_batch: int = 64, max_wait_s: float = 0.005):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self._run_batch = run_batch
+        self._max_batch = max_batch
+        self._max_wait = max(0.0, max_wait_s)
+        self._queue: queue.Queue = queue.Queue()
+        self._closed = False
+        # Guards the closed-check + enqueue pair: without it a submit racing
+        # close() could land behind the _CLOSE sentinel and never resolve.
+        self._submit_lock = threading.Lock()
+        self.n_batches = 0
+        self.n_queries = 0
+        self._thread = threading.Thread(target=self._worker,
+                                        name="oms-microbatch", daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------------
+    def submit(self, spec: QuerySpec) -> Future:
+        fut: Future = Future()
+        with self._submit_lock:
+            if self._closed:
+                raise RuntimeError("MicroBatcher is closed")
+            self._queue.put((spec, fut))
+        return fut
+
+    def close(self) -> None:
+        """Drain outstanding requests, stop the worker, join it."""
+        with self._submit_lock:
+            if not self._closed:
+                self._closed = True
+                self._queue.put(_CLOSE)
+        self._thread.join()
+
+    def __enter__(self) -> "MicroBatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is _CLOSE:
+                return
+            batch = [item]
+            deadline = time.monotonic() + self._max_wait
+            saw_close = False
+            while len(batch) < self._max_batch:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                try:
+                    nxt = self._queue.get(timeout=remaining)
+                except queue.Empty:
+                    break
+                if nxt is _CLOSE:
+                    saw_close = True
+                    break
+                batch.append(nxt)
+            self._dispatch(batch)
+            if saw_close:
+                return
+
+    @staticmethod
+    def _resolve(fut: Future, *, result=None, error=None) -> None:
+        # A caller may cancel its future at any point; losing that race must
+        # not kill the worker thread (set_result on a cancelled future
+        # raises InvalidStateError).
+        try:
+            if error is not None:
+                fut.set_exception(error)
+            else:
+                fut.set_result(result)
+        except InvalidStateError:
+            pass
+
+    def _dispatch(self, batch) -> None:
+        specs = [spec for spec, _ in batch]
+        futures = [fut for _, fut in batch]
+        try:
+            results = self._run_batch(coalesce_queries(specs))
+            if len(results) != len(batch):
+                raise RuntimeError(
+                    f"run_batch returned {len(results)} results for a "
+                    f"{len(batch)}-query batch")
+        except BaseException as e:
+            for fut in futures:
+                self._resolve(fut, error=e)
+            return
+        self.n_batches += 1
+        self.n_queries += len(batch)
+        for fut, res in zip(futures, results):
+            self._resolve(fut, result=res)

@@ -1,0 +1,250 @@
+"""Slab planning over the store's merged layout (serve-side, host).
+
+RapidOMS streams the packed reference library past the compute engine from
+near-storage; the library is never resident. The pieces that make that work
+on this repro live here:
+
+  * :class:`StoreLayout` — the (charge, pmz)-merged, block-padded layout of
+    a :class:`~repro.store.LibraryStore` computed as *sidecars only*
+    (pmz/charge/decoy/orig + block metadata, ~13 bytes/row) plus an HV
+    gather plan. The packed-HV payload — the dominant term, dim/8 bytes per
+    row — stays in the memory-mapped shard files and is read one bounded
+    slab at a time (:meth:`StoreLayout.read_hv_rows`).
+  * :func:`plan_slabs` — cuts the layout's block dimension into fixed-size
+    slabs of ``slab_blocks`` whole blocks. Every slab has the same device
+    shape (the tail slab is padded), so the per-slab search compiles once.
+  * :func:`slabs_touched` — intersects a coalesced query batch's open
+    precursor windows with each slab's block [min, max] ranges so the
+    streaming executor skips slabs no query touches (the paper's
+    DRAM-orchestrator pruning, lifted to slab granularity).
+  * :func:`slab_arrays` — assembles slab ``s`` as a host-side
+    :class:`~repro.core.blocking.ReferenceDB` ready for ``device_put``.
+
+Row-space invariant: slab ``s`` covers padded rows
+``[s*slab_blocks*max_r, (s+1)*slab_blocks*max_r)`` of the SAME layout the
+resident ``ReferenceDB`` uses (the padding plan is shared code —
+``blocking.padded_partition_plan``). Per-slab search rows offset by the
+slab's start row therefore land in the identical global row space, which is
+what makes the cross-slab top-k merge bit-identical to a resident scan.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Sequence
+
+import numpy as np
+
+from repro.core.blocking import (LibraryRun, ReferenceDB, block_pmz_ranges,
+                                 merge_sorted_runs, padded_partition_plan,
+                                 run_sort_keys)
+
+_F32_MAX = np.float32(np.finfo(np.float32).max)
+
+# Sorts after every real block key in core.search's monotonic bkey space
+# (charge * _CHARGE_KEY + clipped pmz): real charges are small ints, so tail
+# padding blocks keyed by this charge never break the slab's ascending key
+# order that `searchsorted` start-block pruning relies on.
+PAD_BLOCK_CHARGE = 1023
+
+
+class StoreLayout:
+    """Host-side merged+padded layout of a library: every ReferenceDB
+    sidecar as numpy, plus a per-row (run, row) gather plan for the packed
+    HVs, which stay memory-mapped in the store shards until a slab needs
+    them."""
+
+    def __init__(self, *, pmz, charge, is_decoy, orig_idx, block_min,
+                 block_max, block_charge, src_run, src_row, hv_runs,
+                 max_r: int):
+        self.pmz = pmz                    # (Rp,) f32, PAD_PMZ on padding
+        self.charge = charge              # (Rp,) i32, -1 on padding
+        self.is_decoy = is_decoy          # (Rp,) bool
+        self.orig_idx = orig_idx          # (Rp,) i32, -1 on padding
+        self.block_min = block_min        # (nb,) f32
+        self.block_max = block_max        # (nb,) f32
+        self.block_charge = block_charge  # (nb,) i32
+        self.src_run = src_run            # (Rp,) i32 — source run, -1 pad
+        self.src_row = src_row            # (Rp,) i64 — row within the run
+        self._hv_runs = hv_runs           # per-run (n, W) uint32, may be mmap
+        self.max_r = max_r
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_runs(cls, runs: Sequence[LibraryRun], *,
+                  max_r: int) -> "StoreLayout":
+        """Merge (charge, pmz)-sorted runs into the padded blocked layout —
+        the sidecar half of ``build_reference_db_from_runs`` — without ever
+        touching the runs' HV payload."""
+        runs = [LibraryRun(*(a if isinstance(a, np.ndarray) else np.asarray(a)
+                             for a in r)) for r in runs]
+        runs = [r for r in runs if len(r.pmz)]
+        if not runs:
+            raise ValueError("StoreLayout: no rows")
+        run_id, row_in_run = merge_sorted_runs(run_sort_keys(runs))
+
+        R = sum(len(r.pmz) for r in runs)
+        pmz = np.empty((R,), np.float32)
+        charge = np.empty((R,), np.int32)
+        decoy = np.empty((R,), bool)
+        orig = np.empty((R,), np.int32)
+        # Same stable grouped gather as build_reference_db_from_runs: one
+        # argsort groups output positions by run, rows stay ascending.
+        pos = np.argsort(run_id, kind="stable")
+        bounds = np.cumsum([0] + [len(r.pmz) for r in runs])
+        for i, r in enumerate(runs):
+            at = pos[bounds[i]:bounds[i + 1]]
+            rows = row_in_run[at]
+            pmz[at] = np.asarray(r.pmz)[rows]
+            charge[at] = np.asarray(r.charge)[rows]
+            decoy[at] = np.asarray(r.is_decoy)[rows]
+            orig[at] = np.asarray(r.orig_idx)[rows]
+
+        sel, b_charge = padded_partition_plan(charge, max_r)
+        pad = sel < 0
+        idx = np.where(pad, 0, sel)
+        pp = pmz[idx]
+        pp[pad] = _F32_MAX
+        pc = charge[idx]
+        pc[pad] = -1
+        pd = decoy[idx]
+        pd[pad] = False
+        po = orig[idx]
+        po[pad] = -1
+        b_min, b_max = block_pmz_ranges(pp, max_r)
+        return cls(
+            pmz=pp, charge=pc, is_decoy=pd, orig_idx=po,
+            block_min=b_min, block_max=b_max, block_charge=b_charge,
+            src_run=np.where(pad, -1, run_id[idx]).astype(np.int32),
+            src_row=np.where(pad, 0, row_in_run[idx]).astype(np.int64),
+            hv_runs=[r.hvs for r in runs], max_r=max_r)
+
+    @classmethod
+    def from_store(cls, store: Any, *, max_r: int) -> "StoreLayout":
+        """Layout of a :class:`~repro.store.LibraryStore`: shard sidecars
+        are read (small), shard HVs stay memory-mapped."""
+        return cls.from_runs(list(store.iter_runs()), max_r=max_r)
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        return self.pmz.shape[0]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.block_min.shape[0]
+
+    @property
+    def n_words(self) -> int:
+        return self._hv_runs[0].shape[1]
+
+    def sidecar_nbytes(self) -> int:
+        """Host bytes held per row-sidecar (the part that is NOT slabbed)."""
+        return sum(a.nbytes for a in (self.pmz, self.charge, self.is_decoy,
+                                      self.orig_idx, self.src_run,
+                                      self.src_row))
+
+    # -- HV payload ---------------------------------------------------------
+    def read_hv_rows(self, lo: int, hi: int) -> np.ndarray:
+        """Gather padded rows [lo, hi) of the packed HVs from the mmapped
+        runs (zeros on padding rows). Within each run the gathered rows are
+        ascending (the merge is stable), so shard reads stay sequential."""
+        out = np.zeros((hi - lo, self.n_words), np.uint32)
+        src = self.src_run[lo:hi]
+        rows = self.src_row[lo:hi]
+        for run in np.unique(src):
+            if run < 0:
+                continue
+            m = src == run
+            out[m] = np.asarray(self._hv_runs[run][rows[m]])
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Slab planning
+# ---------------------------------------------------------------------------
+
+
+class SlabPlan(NamedTuple):
+    """Fixed-size slab cut of a layout's block dimension."""
+
+    slab_blocks: int   # whole blocks per slab (every slab, tail padded)
+    n_slabs: int
+    max_r: int
+
+    @property
+    def slab_rows(self) -> int:
+        return self.slab_blocks * self.max_r
+
+
+def plan_slabs(n_blocks: int, *, max_r: int, slab_rows: int) -> SlabPlan:
+    """Round ``slab_rows`` up to whole blocks and cap at the whole store."""
+    if slab_rows < 1:
+        raise ValueError(f"slab_rows must be >= 1, got {slab_rows}")
+    if n_blocks < 1:
+        raise ValueError("plan_slabs: empty layout")
+    slab_blocks = min(max(1, -(-slab_rows // max_r)), n_blocks)
+    return SlabPlan(slab_blocks=slab_blocks,
+                    n_slabs=-(-n_blocks // slab_blocks), max_r=max_r)
+
+
+def slabs_touched(layout, q_pmz: np.ndarray, q_charge: np.ndarray, *,
+                  open_tol_da: float, plan: SlabPlan) -> np.ndarray:
+    """(n_slabs,) bool: does any query's open precursor window intersect any
+    block of the slab? A skipped slab cannot contain an in-window candidate
+    (the std ppm window is nested inside the open window), so skipping
+    preserves bit-identity with a full scan.
+    """
+    qp = np.asarray(q_pmz)
+    qc = np.asarray(q_charge)
+    bmin = np.asarray(layout.block_min)
+    bmax = np.asarray(layout.block_max)
+    bch = np.asarray(layout.block_charge)
+    hit = np.zeros((layout.n_blocks,), bool)
+    for c in np.unique(qc):
+        blk = bch == c
+        if not blk.any():
+            continue
+        m = qc == c
+        lo = np.sort(qp[m] - open_tol_da)
+        hi = np.sort(qp[m] + open_tol_da)
+        # Block b intersects some window [lo_i, hi_i] iff
+        # #{i: lo_i <= bmax_b} > #{i: hi_i < bmin_b} — two searchsorteds.
+        a = np.searchsorted(lo, bmax[blk], side="right")
+        b = np.searchsorted(hi, bmin[blk], side="left")
+        hit[blk] |= a > b
+    padded = np.zeros((plan.n_slabs * plan.slab_blocks,), bool)
+    padded[:layout.n_blocks] = hit
+    return padded.reshape(plan.n_slabs, plan.slab_blocks).any(axis=1)
+
+
+def slab_arrays(layout: StoreLayout, s: int, plan: SlabPlan) -> ReferenceDB:
+    """Assemble slab ``s`` as a host-side ReferenceDB (numpy leaves): the
+    slab's rows/blocks sliced from the padded layout, tail-padded to the
+    fixed slab shape so every slab hits one jit cache entry. This is the
+    only place the packed HV payload is materialised — one slab's worth.
+    """
+    b0 = s * plan.slab_blocks
+    b1 = min(b0 + plan.slab_blocks, layout.n_blocks)
+    if not b0 < b1:
+        raise ValueError(f"slab {s} out of range (n_slabs={plan.n_slabs})")
+    r0, r1 = b0 * plan.max_r, b1 * plan.max_r
+    rows, nb = plan.slab_rows, plan.slab_blocks
+
+    hvs = np.zeros((rows, layout.n_words), np.uint32)
+    hvs[:r1 - r0] = layout.read_hv_rows(r0, r1)
+    pmz = np.full((rows,), _F32_MAX, np.float32)
+    pmz[:r1 - r0] = layout.pmz[r0:r1]
+    charge = np.full((rows,), -1, np.int32)
+    charge[:r1 - r0] = layout.charge[r0:r1]
+    decoy = np.zeros((rows,), bool)
+    decoy[:r1 - r0] = layout.is_decoy[r0:r1]
+    orig = np.full((rows,), -1, np.int32)
+    orig[:r1 - r0] = layout.orig_idx[r0:r1]
+    b_min = np.full((nb,), np.inf, np.float32)
+    b_min[:b1 - b0] = layout.block_min[b0:b1]
+    b_max = np.full((nb,), -np.inf, np.float32)
+    b_max[:b1 - b0] = layout.block_max[b0:b1]
+    b_charge = np.full((nb,), PAD_BLOCK_CHARGE, np.int32)
+    b_charge[:b1 - b0] = layout.block_charge[b0:b1]
+    return ReferenceDB(hvs=hvs, pmz=pmz, charge=charge, is_decoy=decoy,
+                       orig_idx=orig, block_min=b_min, block_max=b_max,
+                       block_charge=b_charge, max_r=plan.max_r)

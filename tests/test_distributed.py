@@ -54,6 +54,37 @@ def test_sharded_search_equals_single_device():
     assert "SHARDED_OK" in out
 
 
+def test_streaming_engine_per_mesh_slab():
+    """Streaming serve across mesh devices: the slab stream dealt round-robin
+    over the model axis must stay bit-identical to the resident search."""
+    out = _run("""
+        import jax, numpy as np, tempfile
+        from repro.core import OMSConfig, OMSPipeline
+        from repro.core.search import oms_search
+        from repro.data.spectra import LibraryConfig, make_dataset
+        from repro.distributed.collectives import streaming_engine_for_mesh
+
+        cfg = OMSConfig(dim=512, max_r=32, q_block=8, n_levels=16)
+        ds = make_dataset(LibraryConfig(n_refs=500, n_queries=40, seed=5))
+        pipe = OMSPipeline(cfg, ds.refs)
+        hvs, qp, qc = pipe.encode_queries(ds.queries)
+        params = pipe.search_params(qp, qc, top_k=3)
+        want = oms_search(pipe.db, hvs, qp, qc, params, dim=cfg.dim)
+        with tempfile.TemporaryDirectory() as tmp:
+            store = OMSPipeline.ingest(cfg, ds.refs, tmp + "/s")
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            eng = streaming_engine_for_mesh(store, mesh, max_r=cfg.max_r,
+                                            slab_rows=96)
+            assert len(eng.devices) == 4
+            got = eng.search_encoded(hvs, qp, qc, params, dim=cfg.dim)
+        for f in want._fields:
+            assert (np.asarray(getattr(want, f))
+                    == np.asarray(getattr(got, f))).all(), f
+        print("STREAM_MESH_OK")
+    """)
+    assert "STREAM_MESH_OK" in out
+
+
 def test_pipeline_parallel_forward():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np

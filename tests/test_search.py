@@ -67,6 +67,40 @@ def test_open_window_respected():
     assert (np.abs(dbp[rows[ok]] - qp[ok]) <= CFG.open_tol_da + 1e-3).all()
 
 
+def test_blocked_equals_exhaustive_charge_straddle():
+    """Regression: q-block grouping in plan_search must mirror the padded
+    per-charge layout. With 40 queries over charges {2, 3} a charge boundary
+    lands mid-q-block; global-index grouping used to understate k_blocks and
+    silently drop in-window matches (found by the streaming-engine
+    bit-identity requirement)."""
+    pipe, ds = _pipe(5, n_refs=500, n_queries=40)
+    blk = pipe.search(ds.queries, top_k=3).result
+    exh = pipe.search(ds.queries, exhaustive=True, top_k=3).result
+    for f in blk._fields:
+        assert (np.asarray(getattr(blk, f)) == np.asarray(getattr(exh, f))).all(), f
+
+
+def test_top_k_validation():
+    """Regression: top_k < 1 and top_k > n_rows used to surface as opaque
+    gather/shape failures inside jit; both must fail fast and clearly."""
+    from repro.core.search import oms_search
+    pipe, ds = _pipe(6, n_refs=128, n_queries=8)
+    hvs, qp, qc = pipe.encode_queries(ds.queries)
+    params = pipe.search_params(qp, qc)
+    for bad_k in (0, -3):
+        with pytest.raises(ValueError, match="top_k must be >= 1"):
+            oms_search(pipe.db, hvs, qp, qc, params._replace(top_k=bad_k),
+                       dim=CFG.dim)
+    too_many = pipe.db.n_rows + 1
+    with pytest.raises(ValueError, match="exceeds the reference DB"):
+        oms_search(pipe.db, hvs, qp, qc, params._replace(top_k=too_many),
+                   dim=CFG.dim)
+    # max legal k still works end-to-end
+    r = oms_search(pipe.db, hvs, qp, qc, params._replace(top_k=2),
+                   dim=CFG.dim)
+    assert np.asarray(r.open_idx).shape == (8, 2)
+
+
 def test_min_sim_threshold():
     pipe, ds = _pipe(5)
     hvs, qp, qc = pipe.encode_queries(ds.queries)

@@ -1,0 +1,312 @@
+"""Streaming serve subsystem: slab layout, cross-slab top-k merging, the
+micro-batching scheduler, and the ``resident=False`` pipeline wiring.
+
+Tentpole guarantee under test: the streaming engine returns bit-identical
+:class:`SearchResult`s to the resident ``oms_search`` at EVERY slab size —
+1-row slabs, awkward-prime slabs, whole-store slab — on a target+decoy
+store, including the adversarial merge cases (exact score ties straddling a
+slab boundary, ``top_k`` larger than any single slab's matching rows, a
+query whose precursor window touches zero slabs).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import OMSConfig, OMSPipeline
+from repro.core.blocking import LibraryRun, build_reference_db_from_runs
+from repro.core.search import SearchParams, oms_search
+from repro.data.spectra import LibraryConfig, make_dataset
+from repro.serve import (MicroBatcher, QuerySpec, StoreLayout,
+                         StreamingEngine, coalesce_queries, plan_slabs,
+                         slabs_touched)
+
+# n_queries=40 with charges {2,3} puts a charge boundary mid-q-block — the
+# regression dataset for the plan_search charge-run-local grouping fix.
+CFG = OMSConfig(dim=512, max_r=32, q_block=8, n_levels=16)
+DS = dict(n_refs=500, n_queries=40, seed=5)
+
+
+def _assert_result_equal(a, b, ctx=""):
+    for f in a._fields:
+        assert (np.asarray(getattr(a, f)) == np.asarray(getattr(b, f))).all(), \
+            (ctx, f)
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    ds = make_dataset(LibraryConfig(**DS))
+    pipe = OMSPipeline(CFG, ds.refs, chunk_rows=192)
+    path = str(tmp_path_factory.mktemp("serve") / "store")
+    store = OMSPipeline.ingest(CFG, ds.refs, path, chunk_rows=192)
+    encoded = pipe.encode_queries(ds.queries)
+    return ds, pipe, store, encoded
+
+
+# ---------------------------------------------------------------------------
+# Layout: the sidecar-only merged view must equal the resident DB
+# ---------------------------------------------------------------------------
+
+
+def test_layout_matches_resident_db(setup):
+    ds, pipe, store, _ = setup
+    layout = StoreLayout.from_store(store, max_r=CFG.max_r)
+    for f in ("pmz", "charge", "is_decoy", "orig_idx",
+              "block_min", "block_max", "block_charge"):
+        assert (np.asarray(getattr(pipe.db, f))
+                == np.asarray(getattr(layout, f))).all(), f
+    # the HV gather plan reproduces the resident payload exactly
+    assert (layout.read_hv_rows(0, layout.n_rows)
+            == np.asarray(pipe.db.hvs)).all()
+    # and a mid-stream window too (mmap slab read path)
+    assert (layout.read_hv_rows(65, 131)
+            == np.asarray(pipe.db.hvs)[65:131]).all()
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity across slab sizes (acceptance: 1 row / awkward prime / whole)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("max_r,slab_rows", [
+    (1, 1),            # 1-row blocks, 1-row slabs — maximally degenerate
+    (1, 97),           # awkward prime slab size
+    (32, 32),          # one block per slab
+    (32, 96),          # several blocks per slab
+    (32, 1 << 30),     # whole store in one slab
+])
+def test_streaming_bitidentical(setup, max_r, slab_rows):
+    ds, pipe, store, _ = setup
+    resident = OMSPipeline.from_store(store, CFG, max_r=max_r)
+    hvs, qp, qc = resident.encode_queries(ds.queries)
+    params = resident.search_params(qp, qc, top_k=3)
+    want = oms_search(resident.db, hvs, qp, qc, params, dim=CFG.dim)
+
+    eng = StreamingEngine(store, max_r=max_r, slab_rows=slab_rows)
+    got = eng.search_encoded(hvs, qp, qc, params, dim=CFG.dim)
+    _assert_result_equal(want, got, ctx=(max_r, slab_rows))
+    if slab_rows >= eng.layout.n_rows:   # single-slab degenerate case
+        assert eng.plan.n_slabs == 1
+
+
+def test_streaming_exhaustive_matches(setup):
+    ds, pipe, store, (hvs, qp, qc) = setup
+    params = pipe.search_params(qp, qc, exhaustive=True, top_k=2)
+    want = oms_search(pipe.db, hvs, qp, qc, params, dim=CFG.dim)
+    eng = StreamingEngine(store, max_r=CFG.max_r, slab_rows=64)
+    got = eng.search_encoded(hvs, qp, qc, params, dim=CFG.dim)
+    _assert_result_equal(want, got)
+    assert eng.last_stats.n_scanned == eng.plan.n_slabs  # baseline scans all
+
+
+def test_pipeline_resident_false(setup):
+    """from_store(resident=False) serves through the engine transparently:
+    same SearchResult AND same FDR output as the resident pipeline."""
+    ds, pipe, store, _ = setup
+    stream = OMSPipeline.from_store(store, CFG, resident=False, slab_rows=96)
+    assert stream.db is None and stream.engine is not None
+    want = pipe.search(ds.queries, top_k=2)
+    got = stream.search(ds.queries, top_k=2)
+    _assert_result_equal(want.result, got.result)
+    for w, g in ((want.open_fdr, got.open_fdr), (want.std_fdr, got.std_fdr)):
+        assert int(w.n_accepted) == int(g.n_accepted)
+        assert (np.asarray(w.accept) == np.asarray(g.accept)).all()
+        assert np.allclose(np.asarray(w.q_values), np.asarray(g.q_values))
+
+
+def test_streaming_never_materialises_library_on_device(setup, monkeypatch):
+    """The engine must never device_put an array with as many rows as the
+    library — only slab-, query- or winner-sized ones."""
+    import jax
+
+    ds, pipe, store, (hvs, qp, qc) = setup
+    eng = StreamingEngine(store, max_r=CFG.max_r, slab_rows=64)
+    n_rows = eng.layout.n_rows
+    assert eng.plan.slab_rows < n_rows
+    real = jax.device_put
+    seen = []
+
+    def spy(x, *a, **k):
+        for leaf in jax.tree_util.tree_leaves(x):
+            shape = getattr(leaf, "shape", ())
+            if shape:
+                seen.append(int(shape[0]))
+        return real(x, *a, **k)
+
+    monkeypatch.setattr(jax, "device_put", spy)
+    params = pipe.search_params(qp, qc)
+    eng.search_encoded(hvs, qp, qc, params, dim=CFG.dim)
+    assert seen and max(seen) <= max(eng.plan.slab_rows, hvs.shape[0] + 16)
+
+
+# ---------------------------------------------------------------------------
+# Cross-slab merge adversarial cases (hand-built runs: every HV identical,
+# so every in-window candidate ties at sim == dim and the ranking is decided
+# purely by the (sim desc, row asc) tie-break)
+# ---------------------------------------------------------------------------
+
+
+def _tie_fixture(n=40, w=16):
+    rng = np.random.default_rng(0)
+    hv = rng.integers(0, 2**32, size=(1, w), dtype=np.uint32)
+    hvs = np.repeat(hv, n, axis=0)
+    pmz = np.linspace(1000.0, 1010.0, n).astype(np.float32)  # one open window
+    charge = np.full((n,), 2, np.int32)
+    run = LibraryRun(hvs=hvs, pmz=pmz, charge=charge,
+                     is_decoy=np.zeros((n,), bool),
+                     orig_idx=np.arange(n, dtype=np.int32))
+    q_hvs = jnp.asarray(hv)
+    q_pmz = jnp.asarray([1005.0], jnp.float32)
+    q_charge = jnp.asarray([2], jnp.int32)
+    return run, q_hvs, q_pmz, q_charge
+
+
+def test_exact_ties_straddling_slab_boundary():
+    """top_k=6 with 4-row slabs: winners are rows 0..5 — they straddle the
+    slab 0 / slab 1 boundary and must come out in global row order."""
+    run, q_hvs, q_pmz, q_charge = _tie_fixture()
+    max_r = 4
+    db = build_reference_db_from_runs([run], max_r=max_r)
+    params = SearchParams(q_block=4, k_blocks=db.n_blocks, top_k=6)
+    want = oms_search(db, q_hvs, q_pmz, q_charge, params, dim=512)
+
+    layout = StoreLayout.from_runs([run], max_r=max_r)
+    eng = StreamingEngine(layout, max_r=max_r, slab_rows=4)
+    got = eng.search_encoded(q_hvs, q_pmz, q_charge, params, dim=512)
+    _assert_result_equal(want, got)
+    # every candidate ties, so the 6 winners are exactly rows 0..5
+    assert np.asarray(got.open_row)[0].tolist() == [0, 1, 2, 3, 4, 5]
+    assert (np.asarray(got.open_sim)[0] == 512).all()
+
+
+def test_k_larger_than_any_single_slabs_matches():
+    """No single 4-row slab can fill top_k=6 — the merge must accumulate
+    valid winners across slabs instead of padding with -1."""
+    run, q_hvs, q_pmz, q_charge = _tie_fixture()
+    layout = StoreLayout.from_runs([run], max_r=4)
+    eng = StreamingEngine(layout, max_r=4, slab_rows=4)
+    assert eng.plan.slab_rows < 6    # the premise: a slab can't fill k
+    # ppm window widened so the std list must also fill across slabs
+    params = SearchParams(q_block=4, k_blocks=layout.n_blocks, top_k=6,
+                          ppm_tol=1e5)
+    got = eng.search_encoded(q_hvs, q_pmz, q_charge, params, dim=512)
+    assert (np.asarray(got.open_idx)[0] >= 0).all()
+    assert (np.asarray(got.std_idx)[0] >= 0).all()
+
+
+def test_query_touching_zero_slabs(setup):
+    """A query whose (charge, pmz) window intersects no slab must scan
+    nothing and report all -1 — bit-identical to the resident scan."""
+    ds, pipe, store, _ = setup
+    q_hvs = jnp.asarray(np.zeros((1, CFG.n_words), np.uint32))
+    q_pmz = jnp.asarray([900.0], jnp.float32)
+    q_charge = jnp.asarray([9], jnp.int32)       # charge absent from library
+    params = pipe.search_params(q_pmz, q_charge, top_k=2)
+    want = oms_search(pipe.db, q_hvs, q_pmz, q_charge, params, dim=CFG.dim)
+    eng = StreamingEngine(store, max_r=CFG.max_r, slab_rows=64)
+    got = eng.search_encoded(q_hvs, q_pmz, q_charge, params, dim=CFG.dim)
+    _assert_result_equal(want, got)
+    assert (np.asarray(got.open_idx) == -1).all()
+    assert eng.last_stats.n_scanned == 0          # zero slabs streamed
+
+
+def test_slab_pruning_is_window_exact():
+    """slabs_touched marks exactly the slabs whose blocks intersect a query
+    window; out-of-range and wrong-charge queries hit nothing."""
+    run, *_ = _tie_fixture()
+    layout = StoreLayout.from_runs([run], max_r=4)
+    plan = plan_slabs(layout.n_blocks, max_r=4, slab_rows=8)
+    hit = slabs_touched(layout, np.asarray([1000.0]), np.asarray([2]),
+                        open_tol_da=0.2, plan=plan)
+    assert hit[0] and not hit[1:].any()           # only the first slab
+    for qp, qc in (([5000.0], [2]), ([1005.0], [3])):
+        hit = slabs_touched(layout, np.asarray(qp), np.asarray(qc),
+                            open_tol_da=0.2, plan=plan)
+        assert not hit.any()
+
+
+# ---------------------------------------------------------------------------
+# Micro-batching scheduler
+# ---------------------------------------------------------------------------
+
+
+def _spec(pmz, n_peaks=3):
+    return QuerySpec(mz=np.full((n_peaks,), 500.0, np.float32),
+                     intensity=np.ones((n_peaks,), np.float32),
+                     pmz=float(pmz), charge=2)
+
+
+def test_microbatcher_coalesces_and_routes_results():
+    batches = []
+
+    def run_batch(spectra):
+        batches.append(spectra.pmz.shape[0])
+        return [float(p) * 2 for p in np.asarray(spectra.pmz)]
+
+    with MicroBatcher(run_batch, max_batch=4, max_wait_s=0.05) as mb:
+        futs = [mb.submit(_spec(100.0 + i)) for i in range(10)]
+        results = [f.result(timeout=30) for f in futs]
+    assert results == [pytest.approx(2 * (100.0 + i)) for i in range(10)]
+    assert sum(batches) == 10 and max(batches) <= 4   # coalesced, capped
+    assert mb.n_queries == 10 and mb.n_batches == len(batches)
+
+
+def test_microbatcher_propagates_errors_and_recovers():
+    calls = []
+
+    def run_batch(spectra):
+        calls.append(spectra.pmz.shape[0])
+        if len(calls) == 1:
+            raise RuntimeError("scan exploded")
+        return list(range(spectra.pmz.shape[0]))
+
+    with MicroBatcher(run_batch, max_batch=8, max_wait_s=0.01) as mb:
+        bad = mb.submit(_spec(1.0))
+        with pytest.raises(RuntimeError, match="scan exploded"):
+            bad.result(timeout=30)
+        good = mb.submit(_spec(2.0))
+        assert good.result(timeout=30) == 0        # scheduler still alive
+    with pytest.raises(RuntimeError):
+        mb.submit(_spec(3.0))                      # closed
+
+
+def test_microbatcher_result_count_mismatch():
+    with MicroBatcher(lambda spectra: [1, 2, 3], max_batch=1,
+                      max_wait_s=0.0) as mb:
+        fut = mb.submit(_spec(1.0))
+        with pytest.raises(RuntimeError, match="returned 3 results"):
+            fut.result(timeout=30)
+
+
+def test_microbatcher_survives_cancelled_future():
+    """A caller cancelling its future must not kill the worker thread
+    (set_result on a cancelled future raises InvalidStateError)."""
+    import threading
+
+    release = threading.Event()
+
+    def run_batch(spectra):
+        release.wait(10)
+        return list(np.asarray(spectra.pmz))
+
+    with MicroBatcher(run_batch, max_batch=1, max_wait_s=0.0) as mb:
+        doomed = mb.submit(_spec(1.0))
+        assert doomed.cancel()          # cancelled before the batch finishes
+        release.set()
+        ok = mb.submit(_spec(7.0))
+        assert ok.result(timeout=30) == pytest.approx(7.0)  # worker alive
+
+
+def test_microbatcher_submit_after_close_raises():
+    with MicroBatcher(lambda s: list(np.asarray(s.pmz)), max_batch=2,
+                      max_wait_s=0.0) as mb:
+        assert mb.submit(_spec(1.0)).result(timeout=30) == pytest.approx(1.0)
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.submit(_spec(2.0))
+
+
+def test_coalesce_pads_variable_peak_lists():
+    batch = coalesce_queries([_spec(10.0, n_peaks=2), _spec(20.0, n_peaks=5)])
+    assert batch.mz.shape == (2, 5)
+    assert (np.asarray(batch.intensity)[0, 2:] == 0).all()   # padding
+    assert np.asarray(batch.pmz).tolist() == [10.0, 20.0]
