@@ -26,6 +26,7 @@ MODULES = [
     ("fusedvm", "benchmarks.fused_vs_matrix"),
     ("ingest", "benchmarks.ingest_throughput"),
     ("stream", "benchmarks.stream_throughput"),
+    ("cascade", "benchmarks.cascade_throughput"),
     ("encode", "benchmarks.encode_throughput"),
     ("energy", "benchmarks.energy_model"),
     ("roofline", "benchmarks.roofline"),

@@ -3,8 +3,12 @@ from repro.core import backends, encode_backends
 from repro.core.blocking import (LibraryRun, ReferenceDB, build_reference_db,
                                  build_reference_db_from_runs, merge_sorted_runs,
                                  shard_reference_db)
+from repro.core.cascade import (CascadeOutput, CascadeParams, StageOutput,
+                                cascade_search)
 from repro.core.encoding import (Codebooks, PreprocessParams, make_codebooks,
                                  preprocess_spectra, encode_spectra)
-from repro.core.fdr import fdr_filter
+from repro.core.fdr import (compute_q_values, compute_q_values_grouped,
+                            fdr_filter, fdr_filter_grouped)
 from repro.core.pipeline import OMSConfig, OMSPipeline
-from repro.core.search import SearchParams, SearchResult, oms_search, plan_search
+from repro.core.search import (SearchParams, SearchResult,
+                               narrow_search_params, oms_search, plan_search)

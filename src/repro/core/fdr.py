@@ -1,10 +1,20 @@
-"""Target-decoy FDR filtering (paper §II-D).
+"""Target-decoy FDR filtering (paper §II-D) + subgroup (shift-grouped) FDR.
 
 Standard target-decoy competition: matches are ranked by score; at any score
 cutoff, FDR ≈ (#decoy matches) / (#target matches) above the cutoff. Each
 match gets a q-value (the minimal FDR at which it is accepted, monotonised
 from the bottom of the ranking); matches with q ≤ threshold (paper: 1%) and a
 target (non-decoy) reference are reported as identifications.
+
+Subgroup FDR (ANN-Solo-style, required by cascaded narrow→open search): when
+a result set mixes two match populations with different score distributions —
+"standard" matches whose precursor shift is within the narrow window and
+"open" matches carrying a real mass shift — pooling them into one competition
+miscalibrates both (the high-scoring standard population absorbs the decoys
+of the open one). :func:`compute_q_values_grouped` therefore runs the
+target-decoy competition *separately* inside each population and
+:func:`fdr_filter_grouped` thresholds the per-group q-values, which is what
+keeps a cascade's per-stage FDR honest.
 """
 from __future__ import annotations
 
@@ -18,6 +28,14 @@ class FDRResult(NamedTuple):
     accept: jax.Array    # (Q,) / (Q, k) bool — identified at the FDR threshold
     q_values: jax.Array  # (Q,) / (Q, k) f32 — per-match q-value (1.0 for no-match)
     n_accepted: jax.Array  # () i32
+
+
+def _validate_threshold(threshold: float) -> None:
+    """An FDR threshold is a proportion: (0, 1]. 0 or negative would silently
+    accept nothing; > 1 would silently accept every valid target."""
+    if not 0.0 < threshold <= 1.0:
+        raise ValueError(
+            f"FDR threshold must be in (0, 1], got {threshold!r}")
 
 
 @jax.jit
@@ -51,9 +69,40 @@ def compute_q_values(scores: jax.Array, is_decoy: jax.Array,
     return jnp.where(valid, q, 1.0).reshape(shape)
 
 
+@jax.jit
+def compute_q_values_grouped(scores: jax.Array, is_decoy: jax.Array,
+                             valid: jax.Array,
+                             in_narrow: jax.Array) -> jax.Array:
+    """Shift-grouped q-values: the target-decoy competition runs separately
+    over the ``in_narrow`` (|Δpmz| ≤ narrow tol — "standard") and the
+    remaining ("open", mass-shifted) match populations, so a strong standard
+    population cannot mask the decoy rate of the open one.
+
+    Same shapes as :func:`compute_q_values`; each match's q-value comes from
+    its own subgroup's competition, invalid matches report 1.0.
+    """
+    q_std = compute_q_values(scores, is_decoy, valid & in_narrow)
+    q_open = compute_q_values(scores, is_decoy, valid & ~in_narrow)
+    q = jnp.where(in_narrow, q_std, q_open)
+    return jnp.where(valid, q, 1.0)
+
+
 def fdr_filter(scores: jax.Array, is_decoy: jax.Array, valid: jax.Array,
                threshold: float = 0.01) -> FDRResult:
+    _validate_threshold(threshold)
     q = compute_q_values(scores, is_decoy, valid)
+    accept = valid & (~is_decoy) & (q <= threshold)
+    return FDRResult(accept=accept, q_values=q,
+                     n_accepted=jnp.sum(accept, dtype=jnp.int32))
+
+
+def fdr_filter_grouped(scores: jax.Array, is_decoy: jax.Array,
+                       valid: jax.Array, in_narrow: jax.Array,
+                       threshold: float = 0.01) -> FDRResult:
+    """Subgroup target-decoy filtering (see module docstring): accept a
+    match when its *own subgroup's* q-value clears the threshold."""
+    _validate_threshold(threshold)
+    q = compute_q_values_grouped(scores, is_decoy, valid, in_narrow)
     accept = valid & (~is_decoy) & (q <= threshold)
     return FDRResult(accept=accept, q_values=q,
                      n_accepted=jnp.sum(accept, dtype=jnp.int32))

@@ -33,8 +33,12 @@ from repro.core import decoys as decoys_mod
 from repro.core import encode_backends, encoding
 from repro.core.blocking import (LibraryRun, ReferenceDB,
                                  build_reference_db_from_runs)
+from repro.core.cascade import (CascadeOutput, CascadeParams, cascade_search,
+                                row_match_flags)
 from repro.core.fdr import FDRResult, fdr_filter
-from repro.core.search import SearchParams, SearchResult, oms_search, plan_search
+from repro.core.search import (SearchParams, SearchResult,
+                               narrow_search_params, oms_search, plan_search,
+                               scanned_rows)
 from repro.data.spectra import SpectraSet
 # Only the dependency-free constants at module level: repro.store.library_store
 # imports repro.core, so LibraryStore itself is imported lazily inside the
@@ -283,6 +287,18 @@ class OMSPipeline:
         or the streaming engine's host layout (same arrays, numpy)."""
         return self.db if self.db is not None else self.engine.layout
 
+    @property
+    def _host_sidecars(self) -> tuple[np.ndarray, np.ndarray]:
+        """(pmz, is_decoy) row sidecars as host numpy, fetched once — the
+        resident DB holds them on device and the cascade's FDR grouping
+        must not pay a library-sized D2H copy per call."""
+        cached = getattr(self, "_host_sidecars_cache", None)
+        if cached is None:
+            meta = self._block_meta
+            cached = (np.asarray(meta.pmz), np.asarray(meta.is_decoy))
+            self._host_sidecars_cache = cached
+        return cached
+
     def search_params(self, q_pmz, q_charge, *, exhaustive=False,
                       open_tol_da=None, backend=None,
                       top_k=None) -> SearchParams:
@@ -320,9 +336,7 @@ class OMSPipeline:
             n_rows = self.engine.layout.n_rows
 
             def _fdr(row, sim):
-                row_h = np.asarray(row)
-                valid = row_h >= 0
-                isd = isd_np[np.clip(row_h, 0, n_rows - 1)] & valid
+                valid, isd = row_match_flags(row, isd_np, n_rows)
                 return fdr_filter(jnp.asarray(sim).astype(jnp.float32),
                                   jnp.asarray(isd), jnp.asarray(valid),
                                   threshold=self.cfg.fdr_threshold)
@@ -343,6 +357,92 @@ class OMSPipeline:
             open_fdr=_fdr(result.open_row, result.open_sim),
             std_fdr=_fdr(result.std_row, result.std_sim),
         )
+
+    # ------------------------------------------------------------------
+    # Cascaded narrow→open identification (see repro.core.cascade)
+    # ------------------------------------------------------------------
+    def search_cascade_encoded(self, hvs: jax.Array, q_pmz: jax.Array,
+                               q_charge: jax.Array, *,
+                               narrow_tol_da: float = 1.0,
+                               run_stage1: bool = True,
+                               exhaustive: bool = False,
+                               backend: str | None = None,
+                               top_k: int | None = None) -> CascadeOutput:
+        """Two-stage cascade over an encoded query batch: a narrow-window
+        pass identifies unmodified spectra at the configured FDR, and only
+        the fall-through queries pay for the full open scan. Works on both
+        the resident DB and the streaming engine (where stage 1's slab
+        pruning windows are far narrower, so far fewer slabs stream).
+
+        With ``run_stage1=False`` the output is bit-identical to
+        :meth:`search_encoded`'s pure open search — the cascade's stage 2
+        simply runs on every query.
+        """
+        qp_np = np.asarray(q_pmz)
+        qc_np = np.asarray(q_charge)
+        meta = self._block_meta
+        k = self.cfg.top_k if top_k is None else top_k
+
+        def run_stage(sel: np.ndarray, *, narrow: bool):
+            qp_s, qc_s = qp_np[sel], qc_np[sel]
+            if narrow:
+                # one plan_search per stage: the base params carry a
+                # placeholder k_blocks that narrow_search_params replaces
+                base = SearchParams(
+                    ppm_tol=self.cfg.ppm_tol,
+                    open_tol_da=self.cfg.open_tol_da,
+                    q_block=self.cfg.q_block, k_blocks=1,
+                    backend=backend or self.cfg.backend,
+                    exhaustive=exhaustive, top_k=k)
+                params = narrow_search_params(meta, qp_s, qc_s, base,
+                                              narrow_tol_da=narrow_tol_da)
+            else:
+                params = self.search_params(qp_s, qc_s, exhaustive=exhaustive,
+                                            backend=backend, top_k=k)
+            sel_j = jnp.asarray(sel)
+            hv_s, qp_d, qc_d = hvs[sel_j], q_pmz[sel_j], q_charge[sel_j]
+            if self.engine is not None:
+                res = self.engine.search_encoded(
+                    hv_s, qp_d, qc_d, params, dim=self.cfg.dim,
+                    q_pmz_np=qp_s, q_charge_np=qc_s)
+                stats = self.engine.last_stats
+            else:
+                res = oms_search(self.db, hv_s, qp_d, qc_d, params,
+                                 dim=self.cfg.dim, q_pmz_np=qp_s,
+                                 q_charge_np=qc_s)
+                stats = None
+            return res, scanned_rows(meta, len(sel), params), stats
+
+        if run_stage1 and not narrow_tol_da < self.cfg.open_tol_da:
+            raise ValueError(
+                f"narrow_tol_da={narrow_tol_da!r} must be < the open window "
+                f"({self.cfg.open_tol_da} Da) for the cascade to prune")
+        cparams = CascadeParams(narrow_tol_da=narrow_tol_da,
+                                fdr_threshold=self.cfg.fdr_threshold,
+                                run_stage1=run_stage1)
+        row_pmz, row_isd = self._host_sidecars
+        return cascade_search(
+            run_stage, qp_np, top_k=k, row_pmz=row_pmz, row_is_decoy=row_isd,
+            n_rows=meta.n_rows, params=cparams)
+
+    def search_cascade(self, queries: SpectraSet, *,
+                       narrow_tol_da: float = 1.0, run_stage1: bool = True,
+                       exhaustive: bool = False, backend: str | None = None,
+                       top_k: int | None = None) -> CascadeOutput:
+        hvs, q_pmz, q_charge = self.encode_queries(queries)
+        return self.search_cascade_encoded(
+            hvs, q_pmz, q_charge, narrow_tol_da=narrow_tol_da,
+            run_stage1=run_stage1, exhaustive=exhaustive, backend=backend,
+            top_k=top_k)
+
+    def pure_open_scanned_rows(self, n_queries: int, q_pmz, q_charge, *,
+                               exhaustive: bool = False) -> int:
+        """Static comparison-row count a single-stage open search of this
+        batch would pay — the baseline the cascade's
+        ``scanned_rows_total`` is measured against."""
+        params = self.search_params(np.asarray(q_pmz), np.asarray(q_charge),
+                                    exhaustive=exhaustive)
+        return scanned_rows(self._block_meta, n_queries, params)
 
     def search(self, queries: SpectraSet, *, exhaustive: bool = False,
                open_tol_da: float | None = None,

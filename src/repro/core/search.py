@@ -256,6 +256,31 @@ def sort_pad_plan(q_pmz: jax.Array, q_charge: jax.Array, q_block: int, *,
     return gather, unpad
 
 
+def narrow_search_params(block_meta, q_pmz, q_charge, params: SearchParams, *,
+                         narrow_tol_da: float) -> SearchParams:
+    """Stage-1 (narrow-window) variant of ``params`` for cascaded search.
+
+    The open window shrinks to ``narrow_tol_da`` and ``k_blocks`` is
+    re-planned for that window with the SAME pruning math (`plan_search`)
+    the open pass uses — so the narrow scan touches only the handful of
+    reference blocks a near-zero precursor shift can reach, which is where
+    the cascade's speed win comes from. ``block_meta`` is anything exposing
+    the block sidecars (a resident ReferenceDB or a serve StoreLayout).
+
+    ``narrow_tol_da`` must sit strictly inside (0, params.open_tol_da]; it
+    should also exceed the widest standard ppm window (default 1 Da vs
+    20 ppm * 1800 Da ≈ 0.036 Da) so the narrow scan's block span still
+    covers every ppm-window candidate.
+    """
+    if not 0.0 < narrow_tol_da <= params.open_tol_da:
+        raise ValueError(
+            f"narrow_tol_da must be in (0, open_tol_da={params.open_tol_da}]"
+            f", got {narrow_tol_da!r}")
+    k = plan_search(block_meta, np.asarray(q_pmz), np.asarray(q_charge),
+                    open_tol_da=narrow_tol_da, q_block=params.q_block)
+    return params._replace(open_tol_da=narrow_tol_da, k_blocks=k)
+
+
 def oms_search(db: ReferenceDB, q_hvs: jax.Array, q_pmz: jax.Array,
                q_charge: jax.Array, params: SearchParams, *, dim: int,
                q_pmz_np: np.ndarray | None = None,

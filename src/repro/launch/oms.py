@@ -23,12 +23,25 @@ Entry points:
     PYTHONPATH=src python -m repro.launch.oms --refs 8192 --queries 512 \\
         [--backend vpu|mxu|kernel_vpu|kernel_mxu|fused|fused_xla]
 
+``search``, ``serve`` and the legacy one-shot accept ``--cascade``
+(``--narrow-tol-da``, ``--no-stage1``): stage 1 is a narrow-window scan that
+identifies unmodified spectra at the configured FDR, and only the
+fall-through queries pay for the open scan (shift-grouped FDR keeps the two
+match populations separately calibrated). ``--cascade --no-stage1`` must be
+byte-identical to the plain search — that is the CI smoke check.
+
 ``serve`` requests are one JSON object per line:
 ``{"id": ..., "pmz": f, "charge": i, "mz": [...], "intensity": [...]}``;
 responses echo the id with the dual-window top-k matches. Responses are
-bit-identical between ``--resident`` and streaming runs and independent of
+bit-identical between ``--resident`` and streaming runs, and — without
+``--cascade``, or with ``--cascade --no-stage1`` — independent of
 micro-batch composition (FDR is a corpus-level statistic over a whole
-batch, so it is reported by ``search``, not per request here).
+batch, so it is reported by ``search``, not per request here). With the
+cascade's stage 1 ON, identification gates on target-decoy FDR computed
+over the coalesced batch, so which queries skip the open scan is a
+batch-level decision: statistically meaningful with large ``--max-batch``,
+noise at batch size ~1 (tiny batches have no decoy competition; use
+``search`` for calibrated corpus-level cascades).
 """
 from __future__ import annotations
 
@@ -85,6 +98,21 @@ def _serving_args(ap):
                     help="HyperOMS-style full scan (baseline)")
 
 
+def _cascade_args(ap):
+    """Cascaded narrow→open identification knobs (search/oneshot/serve)."""
+    ap.add_argument("--cascade", action="store_true",
+                    help="two-stage cascade: a narrow-window pass identifies "
+                         "unmodified spectra first; only the fall-through "
+                         "queries pay for the open scan")
+    ap.add_argument("--narrow-tol-da", type=float, default=1.0,
+                    help="stage-1 open window (Da) — also the shift-grouped "
+                         "FDR subgroup boundary")
+    ap.add_argument("--no-stage1", action="store_true",
+                    help="run the cascade path with stage 1 disabled (pure "
+                         "open search — bit-identical to a plain search; "
+                         "the byte-identity smoke check)")
+
+
 def _dataset(args):
     return make_dataset(LibraryConfig(n_refs=args.refs,
                                       n_queries=getattr(args, "queries", 1),
@@ -99,7 +127,14 @@ def _serve(pipe: OMSPipeline, ds, args) -> None:
     jax.block_until_ready(hvs)
     t_encode = time.perf_counter() - t0
     t0 = time.perf_counter()
-    out = pipe.search_encoded(hvs, q_pmz, q_charge, exhaustive=args.exhaustive)
+    cascade = getattr(args, "cascade", False)
+    if cascade:
+        out = pipe.search_cascade_encoded(
+            hvs, q_pmz, q_charge, narrow_tol_da=args.narrow_tol_da,
+            run_stage1=not args.no_stage1, exhaustive=args.exhaustive)
+    else:
+        out = pipe.search_encoded(hvs, q_pmz, q_charge,
+                                  exhaustive=args.exhaustive)
     jax.block_until_ready(out.result)
     t_search = time.perf_counter() - t0
     t_total = t_encode + t_search
@@ -122,6 +157,17 @@ def _serve(pipe: OMSPipeline, ds, args) -> None:
           f"({100 * t_encode / t_total:.0f}% / {100 * t_search / t_total:.0f}%)")
     print(f"[oms] comparisons reduction at +/-{args.open_tol} Da: "
           f"{stats['reduction']:.2f}x vs exhaustive")
+    if cascade:
+        pure = pipe.pure_open_scanned_rows(args.queries, q_pmz, q_charge,
+                                           exhaustive=args.exhaustive)
+        n_id = int(out.identified_stage1.sum())
+        s1 = out.stage1.scanned_rows if out.stage1 else 0
+        s2 = out.stage2.scanned_rows if out.stage2 else 0
+        print(f"[oms] cascade: stage1 identified {n_id}/{args.queries} "
+              f"({'off' if args.no_stage1 else f'{args.narrow_tol_da} Da'}); "
+              f"scanned rows {s1}+{s2}={out.scanned_rows_total} "
+              f"vs pure-open {pure} "
+              f"({out.scanned_rows_total / max(pure, 1):.2f}x)")
     print(f"[oms] open-search recall@1:     {np.mean(open_idx[:, 0] == src):.3f} "
           f"(modified queries: {np.mean((open_idx[:, 0] == src)[mod]):.3f})")
     print(f"[oms] standard-search recall@1: {np.mean(std_idx[:, 0] == src):.3f} "
@@ -171,6 +217,7 @@ def cmd_search(argv) -> None:
     # `search --store S` matches the `build` that produced S.
     _dataset_args(ap, refs_default=None)
     _serving_args(ap)
+    _cascade_args(ap)
     _encode_backend_args(ap)
     args = ap.parse_args(argv)
 
@@ -234,8 +281,13 @@ def cmd_serve(argv) -> None:
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
                     help="max wait after the first queued query before the "
                          "coalesced batch is scanned")
+    _cascade_args(ap)
     _encode_backend_args(ap)
     args = ap.parse_args(argv)
+    if args.cascade and not args.no_stage1 \
+            and not args.narrow_tol_da < args.open_tol:
+        ap.error(f"--narrow-tol-da {args.narrow_tol_da} must be < --open-tol "
+                 f"{args.open_tol} (fail now, not per micro-batch)")
 
     t0 = time.perf_counter()
     pipe = OMSPipeline.from_store(
@@ -250,13 +302,24 @@ def cmd_serve(argv) -> None:
         plan = pipe.engine.plan
         mode = (f"streaming {plan.n_slabs} slabs x {plan.slab_rows} rows "
                 f"({plan.slab_blocks} blocks)")
+    if args.cascade:
+        mode += (", cascade off-stage1" if args.no_stage1 else
+                 f", cascade narrow={args.narrow_tol_da} Da")
     print(f"[oms serve] cold-started {args.store} in {t_load:.2f}s — {mode}; "
           f"backend={args.backend} top_k={args.top_k} "
           f"max_batch={args.max_batch} max_wait={args.max_wait_ms}ms",
           file=sys.stderr, flush=True)
 
     def run_batch(spectra):
-        out = pipe.search(spectra)
+        # Cascade mode keeps the response schema: per-query matches only.
+        # Stage-1 identification gates on FDR over the coalesced batch, so
+        # unlike the plain scan it is a batch-level (not per-query) decision.
+        if args.cascade:
+            out = pipe.search_cascade(spectra,
+                                      narrow_tol_da=args.narrow_tol_da,
+                                      run_stage1=not args.no_stage1)
+        else:
+            out = pipe.search(spectra)
         r = out.result
         std_i = np.asarray(r.std_idx); std_s = np.asarray(r.std_sim)
         opn_i = np.asarray(r.open_idx); opn_s = np.asarray(r.open_sim)
@@ -323,6 +386,7 @@ def cmd_oneshot(argv) -> None:
     ap = argparse.ArgumentParser(prog="repro.launch.oms")
     _encoding_args(ap)
     _serving_args(ap)
+    _cascade_args(ap)
     _encode_backend_args(ap)
     args = ap.parse_args(argv)
 

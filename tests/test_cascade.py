@@ -1,0 +1,215 @@
+"""Cascaded narrow→open search: bit-identity invariants and shift-grouped FDR.
+
+Acceptance invariants under test:
+
+  * cascade with stage 1 disabled == today's ``oms_search`` output, exactly;
+  * every stage-2 result == a pure open search restricted to the
+    fall-through queries, exactly;
+  * streamed cascade (``from_store(resident=False)``) == resident cascade
+    at any slab size (1-row blocks, awkward primes, whole store).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import OMSConfig, OMSPipeline
+from repro.core.cascade import CascadeParams, cascade_search
+from repro.core.fdr import compute_q_values, compute_q_values_grouped
+from repro.core.search import SearchParams, narrow_search_params
+from repro.data.spectra import LibraryConfig, make_dataset
+
+CFG = OMSConfig(dim=512, max_r=32, q_block=8, n_levels=16)
+DS = dict(n_refs=500, n_queries=40, seed=5)
+NARROW = 1.0
+
+
+def _assert_result_equal(a, b, ctx=""):
+    for f in a._fields:
+        assert (np.asarray(getattr(a, f)) == np.asarray(getattr(b, f))).all(), \
+            (ctx, f)
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    ds = make_dataset(LibraryConfig(**DS))
+    pipe = OMSPipeline(CFG, ds.refs, chunk_rows=192)
+    path = str(tmp_path_factory.mktemp("cascade") / "store")
+    store = OMSPipeline.ingest(CFG, ds.refs, path, chunk_rows=192)
+    encoded = pipe.encode_queries(ds.queries)
+    return ds, pipe, store, encoded
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: stage 1 disabled == plain oms_search
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("top_k", [1, 3])
+def test_stage1_disabled_equals_pure_open(setup, top_k):
+    ds, pipe, _, (hvs, qp, qc) = setup
+    want = pipe.search_encoded(hvs, qp, qc, top_k=top_k)
+    got = pipe.search_cascade_encoded(hvs, qp, qc, run_stage1=False,
+                                      top_k=top_k)
+    _assert_result_equal(want.result, got.result, ctx=top_k)
+    assert not got.identified_stage1.any()
+    assert got.stage1 is None
+    assert (got.stage2.query_idx == np.arange(40)).all()
+
+
+def test_stage2_equals_restricted_open_search(setup):
+    """Each fall-through query's stage-2 rows must be exactly what a pure
+    open search of only those queries returns."""
+    ds, pipe, _, (hvs, qp, qc) = setup
+    out = pipe.search_cascade_encoded(hvs, qp, qc, narrow_tol_da=NARROW,
+                                      top_k=2)
+    assert out.stage2 is not None and out.stage1 is not None
+    fall = jnp.asarray(out.stage2.query_idx)
+    want = pipe.search_encoded(hvs[fall], qp[fall], qc[fall], top_k=2)
+    _assert_result_equal(want.result, out.stage2.result)
+    # and those rows are what the merged result reports for those queries
+    for f in out.result._fields:
+        assert (np.asarray(getattr(out.result, f))[out.stage2.query_idx]
+                == np.asarray(getattr(out.stage2.result, f))).all(), f
+
+
+def test_identified_queries_carry_stage1_rows(setup):
+    ds, pipe, _, (hvs, qp, qc) = setup
+    out = pipe.search_cascade_encoded(hvs, qp, qc, narrow_tol_da=NARROW,
+                                      top_k=2)
+    idd = out.identified_stage1
+    assert idd.any()
+    for f in out.result._fields:
+        assert (np.asarray(getattr(out.result, f))[idd]
+                == np.asarray(getattr(out.stage1.result, f))[idd]).all(), f
+    # identified queries' best narrow match passed the stage-1 filter
+    assert np.asarray(out.stage1.fdr.accept)[idd, 0].all()
+
+
+# ---------------------------------------------------------------------------
+# Streamed == resident at any slab size
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("slab_rows", [1, 97, 96, 1 << 30])
+def test_streamed_cascade_equals_resident(setup, slab_rows):
+    ds, pipe, store, _ = setup
+    resident = OMSPipeline.from_store(store, CFG)
+    stream = OMSPipeline.from_store(store, CFG, resident=False,
+                                    slab_rows=slab_rows)
+    want = resident.search_cascade(ds.queries, narrow_tol_da=NARROW, top_k=2)
+    got = stream.search_cascade(ds.queries, narrow_tol_da=NARROW, top_k=2)
+    _assert_result_equal(want.result, got.result, ctx=slab_rows)
+    assert (want.identified_stage1 == got.identified_stage1).all()
+    for w, g in ((want.open_fdr, got.open_fdr), (want.std_fdr, got.std_fdr)):
+        assert int(w.n_accepted) == int(g.n_accepted)
+        assert (np.asarray(w.accept) == np.asarray(g.accept)).all()
+        assert np.allclose(np.asarray(w.q_values), np.asarray(g.q_values))
+
+
+def test_streamed_stage1_touches_fewer_slabs(setup):
+    """The cascade's streaming win: stage 1's narrow windows prune at slab
+    granularity, so it streams strictly fewer slabs than an open scan."""
+    ds, pipe, store, (hvs, qp, qc) = setup
+    stream = OMSPipeline.from_store(store, CFG, resident=False, slab_rows=64)
+    out = stream.search_cascade_encoded(hvs, qp, qc, narrow_tol_da=NARROW)
+    assert out.stage1.stream_stats is not None
+    open_scan = stream.engine
+    # pure open over the same batch for the baseline slab count
+    stream.search_encoded(hvs, qp, qc)
+    assert (out.stage1.stream_stats.n_scanned
+            < open_scan.last_stats.n_scanned)
+
+
+# ---------------------------------------------------------------------------
+# Narrow planning + cascade parameter validation
+# ---------------------------------------------------------------------------
+
+
+def test_narrow_params_shrink_k_blocks(setup):
+    ds, pipe, _, (hvs, qp, qc) = setup
+    qp_np, qc_np = np.asarray(qp), np.asarray(qc)
+    p_open = pipe.search_params(qp_np, qc_np)
+    p_narrow = narrow_search_params(pipe.db, qp_np, qc_np, p_open,
+                                    narrow_tol_da=NARROW)
+    assert p_narrow.open_tol_da == NARROW
+    assert p_narrow.k_blocks <= p_open.k_blocks
+    assert p_narrow.ppm_tol == p_open.ppm_tol  # std window untouched
+
+
+def test_narrow_tol_validation(setup):
+    ds, pipe, _, (hvs, qp, qc) = setup
+    p = SearchParams()
+    with pytest.raises(ValueError, match="narrow_tol_da"):
+        narrow_search_params(pipe.db, np.asarray(qp), np.asarray(qc), p,
+                             narrow_tol_da=0.0)
+    with pytest.raises(ValueError, match="narrow_tol_da"):
+        narrow_search_params(pipe.db, np.asarray(qp), np.asarray(qc), p,
+                             narrow_tol_da=p.open_tol_da + 1.0)
+    with pytest.raises(ValueError, match="narrow_tol_da"):
+        pipe.search_cascade_encoded(hvs, qp, qc,
+                                    narrow_tol_da=CFG.open_tol_da)
+    with pytest.raises(ValueError, match="narrow_tol_da"):
+        cascade_search(lambda *a, **k: None, np.zeros((1,)), top_k=1,
+                       row_pmz=np.zeros((1,), np.float32),
+                       row_is_decoy=np.zeros((1,), bool), n_rows=1,
+                       params=CascadeParams(narrow_tol_da=-1.0))
+
+
+def test_cascade_scanned_rows_accounting(setup):
+    ds, pipe, _, (hvs, qp, qc) = setup
+    out = pipe.search_cascade_encoded(hvs, qp, qc, narrow_tol_da=NARROW)
+    assert out.scanned_rows_total == (out.stage1.scanned_rows
+                                      + out.stage2.scanned_rows)
+    assert (out.fallthrough == ~out.identified_stage1).all()
+
+
+# ---------------------------------------------------------------------------
+# Shift-grouped FDR semantics on the merged result
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_q_values_match_per_group_computation(setup):
+    """The merged open_fdr must equal running the plain competition inside
+    each |Δpmz|-defined subgroup independently."""
+    ds, pipe, _, (hvs, qp, qc) = setup
+    out = pipe.search_cascade_encoded(hvs, qp, qc, narrow_tol_da=NARROW,
+                                      top_k=2)
+    row = np.asarray(out.result.open_row)
+    sim = np.asarray(out.result.open_sim).astype(np.float32)
+    meta = pipe.db
+    valid = row >= 0
+    isd = np.asarray(meta.is_decoy)[np.clip(row, 0, meta.n_rows - 1)] & valid
+    dpmz = np.abs(np.asarray(qp, np.float32)[:, None]
+                  - np.asarray(meta.pmz)[np.clip(row, 0, meta.n_rows - 1)])
+    in_narrow = valid & (dpmz <= NARROW)
+    assert in_narrow.any() and (valid & ~in_narrow).any()  # both populations
+
+    got = np.asarray(out.open_fdr.q_values)
+    for grp_mask in (in_narrow, ~in_narrow):
+        ref = np.asarray(compute_q_values(
+            jnp.asarray(sim), jnp.asarray(isd),
+            jnp.asarray(valid & grp_mask)))
+        sel = valid & grp_mask
+        assert np.array_equal(got[sel], ref[sel]), "subgroup q mismatch"
+    assert (got[~valid] == 1.0).all()
+
+
+def test_grouped_differs_from_pooled_when_populations_mix():
+    """A strong standard population must not absorb the open population's
+    decoys: hand-built case where pooled FDR under-reports the open group."""
+    # standard group: 6 high-scoring targets; open group: 2 targets + 2
+    # decoys interleaved at lower scores.
+    scores = jnp.asarray([90., 89., 88., 87., 86., 85., 50., 49., 48., 47.])
+    decoy = jnp.asarray([False] * 6 + [False, True, False, True])
+    valid = jnp.ones(10, bool)
+    in_narrow = jnp.asarray([True] * 6 + [False] * 4)
+    pooled = np.asarray(compute_q_values(scores, decoy, valid))
+    grouped = np.asarray(compute_q_values_grouped(scores, decoy, valid,
+                                                  in_narrow))
+    # pooled: at the last open target (rank 8) fdr = 1 decoy / 8 targets
+    assert pooled[8] == pytest.approx(1 / 8)
+    # grouped: within the open subgroup it is 1 decoy / 2 targets
+    assert grouped[8] == pytest.approx(1 / 2)
+    # the standard subgroup stays clean in both
+    assert (grouped[:6] == 0).all()

@@ -1,0 +1,167 @@
+"""Property-based tests for target-decoy q-values (hypothesis when
+installed, the deterministic `_hypothesis_compat` fallback otherwise).
+
+``compute_q_values`` is checked against a brute-force O(n²) reference on
+random (score, decoy, valid) triples, plus the structural properties that
+make q-values q-values: monotone non-increasing in score rank, invariant
+under permutation of input order (for distinct scores — under exact ties
+the competition's stable rank order is itself input-order-dependent), and
+all-invalid inputs reporting q = 1.0. Every property runs on both the (Q,)
+and the (Q, k) shapes the pipeline emits.
+"""
+import numpy as np
+from _hypothesis_compat import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.fdr import (compute_q_values, compute_q_values_grouped,
+                            fdr_filter, fdr_filter_grouped)
+
+
+def _q_ref(scores, decoy, valid):
+    """Brute-force O(n²) q-values, mirroring the kernel's conventions:
+    stable descending rank (invalid rows sink to the bottom as -inf), FDR at
+    each rank = min(1, cum decoys / max(cum targets, 1)) over valid rows,
+    q = suffix-min of FDR from the row's rank, invalid rows report 1.0."""
+    n = len(scores)
+    s = np.where(valid, np.asarray(scores, np.float32),
+                 np.finfo(np.float32).min)
+    order = np.argsort(-s, kind="stable")
+    d = (np.asarray(decoy)[order] & np.asarray(valid)[order]).astype(float)
+    t = (~np.asarray(decoy)[order] & np.asarray(valid)[order]).astype(float)
+    fdr = np.minimum(np.cumsum(d) / np.maximum(np.cumsum(t), 1.0), 1.0)
+    q_sorted = np.array([fdr[i:].min() for i in range(n)])  # O(n²) suffix min
+    q = np.empty(n)
+    q[order] = q_sorted
+    return np.where(valid, q, 1.0)
+
+
+def _random_triple(rng, n, *, distinct=False, k=None):
+    if distinct:
+        # distinct integer-valued f32 scores: exact under permutation
+        scores = rng.permutation(4 * n)[:n].astype(np.float32)
+    else:
+        scores = rng.normal(size=n).astype(np.float32)
+    decoy = rng.random(n) < rng.uniform(0.1, 0.6)
+    valid = rng.random(n) < rng.uniform(0.5, 1.0)
+    if k is not None:
+        shape = (n // k, k)
+        return (scores[:shape[0] * k].reshape(shape),
+                decoy[:shape[0] * k].reshape(shape),
+                valid[:shape[0] * k].reshape(shape))
+    return scores, decoy, valid
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_q_values_match_bruteforce_flat(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 160))
+    scores, decoy, valid = _random_triple(rng, n)
+    got = np.asarray(compute_q_values(jnp.asarray(scores), jnp.asarray(decoy),
+                                      jnp.asarray(valid)))
+    ref = _q_ref(scores, decoy, valid)
+    assert np.allclose(got, ref, atol=1e-6), (got, ref)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 5))
+@settings(max_examples=15, deadline=None)
+def test_q_values_match_bruteforce_topk(seed, k):
+    """(Q, k) inputs pool all (query, rank) matches into one competition and
+    keep the input shape."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(k, 160))
+    scores, decoy, valid = _random_triple(rng, n, k=k)
+    got = np.asarray(compute_q_values(jnp.asarray(scores), jnp.asarray(decoy),
+                                      jnp.asarray(valid)))
+    assert got.shape == scores.shape
+    ref = _q_ref(scores.reshape(-1), decoy.reshape(-1),
+                 valid.reshape(-1)).reshape(scores.shape)
+    assert np.allclose(got, ref, atol=1e-6)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_q_values_monotone_in_score_rank(seed):
+    """Along the descending-score ranking of valid matches, q-values never
+    decrease (a better score is never harder to accept)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 200))
+    scores, decoy, valid = _random_triple(rng, n)
+    q = np.asarray(compute_q_values(jnp.asarray(scores), jnp.asarray(decoy),
+                                    jnp.asarray(valid)))
+    order = np.argsort(-scores[valid], kind="stable")
+    ranked_q = q[valid][order]
+    assert (np.diff(ranked_q) >= -1e-7).all()
+    assert (q >= 0).all() and (q <= 1.0 + 1e-7).all()
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_q_values_permutation_invariant(seed):
+    """With distinct scores, permuting the input rows permutes the q-values
+    identically (bit-exact: the sorted competition sees the same sequence)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 150))
+    scores, decoy, valid = _random_triple(rng, n, distinct=True)
+    q = np.asarray(compute_q_values(jnp.asarray(scores), jnp.asarray(decoy),
+                                    jnp.asarray(valid)))
+    perm = rng.permutation(n)
+    q_perm = np.asarray(compute_q_values(
+        jnp.asarray(scores[perm]), jnp.asarray(decoy[perm]),
+        jnp.asarray(valid[perm])))
+    assert np.array_equal(q_perm, q[perm])
+
+
+@given(st.integers(0, 10_000), st.sampled_from([(17,), (8, 3)]))
+@settings(max_examples=10, deadline=None)
+def test_all_invalid_rows_yield_q1(seed, shape):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    decoy = jnp.asarray(rng.random(shape) < 0.5)
+    valid = jnp.zeros(shape, bool)
+    q = np.asarray(compute_q_values(scores, decoy, valid))
+    assert (q == 1.0).all() and q.shape == tuple(shape)
+    res = fdr_filter(scores, decoy, valid, threshold=1.0)
+    assert int(res.n_accepted) == 0 and not np.asarray(res.accept).any()
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_grouped_equals_independent_subgroup_competitions(seed):
+    """Shift-grouped q-values == the plain kernel run on each subgroup with
+    the other subgroup masked invalid."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 150))
+    scores, decoy, valid = _random_triple(rng, n)
+    narrow = rng.random(n) < 0.5
+    got = np.asarray(compute_q_values_grouped(
+        jnp.asarray(scores), jnp.asarray(decoy), jnp.asarray(valid),
+        jnp.asarray(narrow)))
+    for mask in (narrow, ~narrow):
+        ref = _q_ref(scores, decoy, valid & mask)
+        sel = valid & mask
+        assert np.allclose(got[sel], ref[sel], atol=1e-6)
+    assert (got[~valid] == 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# Threshold validation (satellite): reject anything outside (0, 1]
+# ---------------------------------------------------------------------------
+
+
+def test_fdr_threshold_validation():
+    import pytest
+
+    scores = jnp.asarray([1.0, 2.0])
+    decoy = jnp.asarray([False, True])
+    valid = jnp.ones(2, bool)
+    for bad in (0.0, -0.01, 1.5, float("inf")):
+        with pytest.raises(ValueError, match="threshold"):
+            fdr_filter(scores, decoy, valid, threshold=bad)
+        with pytest.raises(ValueError, match="threshold"):
+            fdr_filter_grouped(scores, decoy, valid,
+                               jnp.asarray([True, False]), threshold=bad)
+    # 1.0 is a legal (accept-everything-real) threshold
+    res = fdr_filter(scores, decoy, valid, threshold=1.0)
+    assert int(res.n_accepted) == 1

@@ -1,0 +1,79 @@
+"""Golden end-to-end regression: ingest → cascade search → shift-grouped FDR
+on a tiny deterministic dataset, byte-compared against a checked-in JSON
+fixture (``tests/golden/cascade_e2e.json``).
+
+Everything in the flow is seeded (dataset, codebooks, decoys) and every
+reported number is an int or a rounded f32, so the serialized payload is
+stable byte-for-byte; any drift — encoding, blocking, search ranking,
+cascade gating, FDR — fails this test loudly.
+
+Regenerating the fixture after an INTENTIONAL behaviour change is one line:
+
+    PYTHONPATH=src:tests python -c "import test_golden_e2e as g; g.regenerate()"
+"""
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import OMSConfig, OMSPipeline
+from repro.data.spectra import LibraryConfig, make_dataset
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "cascade_e2e.json"
+
+CFG = OMSConfig(dim=256, n_levels=8, max_r=32, q_block=8, top_k=2,
+                backend="vpu")
+DS = LibraryConfig(n_refs=160, n_queries=48, seed=7)
+NARROW_TOL = 1.0
+
+
+def _run(store_dir) -> str:
+    """Ingest → cold-start → cascade → FDR; serialize deterministically."""
+    ds = make_dataset(DS)
+    store = OMSPipeline.ingest(CFG, ds.refs, str(store_dir), chunk_rows=64)
+    pipe = OMSPipeline.from_store(store, CFG)
+    out = pipe.search_cascade(ds.queries, narrow_tol_da=NARROW_TOL)
+
+    r = out.result
+    payload = {
+        "config": {"dim": CFG.dim, "n_levels": CFG.n_levels,
+                   "max_r": CFG.max_r, "q_block": CFG.q_block,
+                   "top_k": CFG.top_k, "narrow_tol_da": NARROW_TOL,
+                   "n_refs": DS.n_refs, "n_queries": DS.n_queries,
+                   "seed": DS.seed},
+        "store_rows": store.n_rows,
+        "identified_stage1": np.asarray(out.identified_stage1,
+                                        int).tolist(),
+        "fallthrough_queries": out.stage2.query_idx.tolist(),
+        "scanned_rows": {"stage1": out.stage1.scanned_rows,
+                         "stage2": out.stage2.scanned_rows},
+        "open": {"idx": np.asarray(r.open_idx).tolist(),
+                 "sim": np.asarray(r.open_sim).tolist(),
+                 "q_values": [[round(float(q), 6) for q in row]
+                              for row in np.asarray(out.open_fdr.q_values)],
+                 "n_accepted": int(out.open_fdr.n_accepted)},
+        "std": {"idx": np.asarray(r.std_idx).tolist(),
+                "sim": np.asarray(r.std_sim).tolist(),
+                "n_accepted": int(out.std_fdr.n_accepted)},
+    }
+    return json.dumps(payload, sort_keys=True, indent=1) + "\n"
+
+
+def regenerate() -> None:
+    """Rewrite the checked-in fixture from the current code's behaviour."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        text = _run(pathlib.Path(td) / "store")
+    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN.write_text(text)
+    print(f"wrote {GOLDEN} ({len(text)} bytes)")
+
+
+def test_golden_cascade_e2e(tmp_path):
+    got = _run(tmp_path / "store")
+    want = GOLDEN.read_text()
+    assert got == want, (
+        "end-to-end cascade output drifted from tests/golden/cascade_e2e.json"
+        " — if the change is intentional, regenerate via the module "
+        "docstring's one-liner and review the diff")

@@ -305,6 +305,54 @@ def test_microbatcher_submit_after_close_raises():
         mb.submit(_spec(2.0))
 
 
+def test_microbatcher_coalescing_independence(setup):
+    """Stress the serve invariant that coalescing NEVER changes an answer:
+    the same query set submitted under max_batch ∈ {1, 3, whole-set} and
+    randomized submit orderings must produce byte-identical responses per
+    query id (the real search path, serialized exactly like the launcher's
+    JSON-lines loop)."""
+    import json
+
+    ds, pipe, store, _ = setup
+    n = 10
+    mz = np.asarray(ds.queries.mz)[:n]
+    inten = np.asarray(ds.queries.intensity)[:n]
+    pmz = np.asarray(ds.queries.pmz)[:n]
+    charge = np.asarray(ds.queries.charge)[:n]
+
+    def run_batch(spectra):
+        r = pipe.search(spectra).result
+        std_i = np.asarray(r.std_idx); std_s = np.asarray(r.std_sim)
+        opn_i = np.asarray(r.open_idx); opn_s = np.asarray(r.open_sim)
+        return [json.dumps(
+            {"std": {"idx": std_i[i].tolist(), "sim": std_s[i].tolist()},
+             "open": {"idx": opn_i[i].tolist(), "sim": opn_s[i].tolist()}},
+            sort_keys=True, separators=(",", ":"))
+            for i in range(std_i.shape[0])]
+
+    def spec_for(i):
+        keep = inten[i] > 0
+        return QuerySpec(mz=mz[i][keep], intensity=inten[i][keep],
+                         pmz=float(pmz[i]), charge=int(charge[i]))
+
+    rng = np.random.default_rng(11)
+    responses = {}            # (max_batch, order_tag) -> {qid: bytes}
+    for max_batch in (1, 3, n):
+        for tag in range(2):  # two randomized submit orderings each
+            order = rng.permutation(n) if tag else np.arange(n)
+            with MicroBatcher(run_batch, max_batch=max_batch,
+                              max_wait_s=0.02) as mb:
+                futs = {int(q): mb.submit(spec_for(int(q))) for q in order}
+                responses[(max_batch, tag)] = {
+                    q: f.result(timeout=60).encode() for q, f in futs.items()}
+
+    base = responses[(1, 0)]
+    assert len(base) == n
+    for key, got in responses.items():
+        for q in range(n):
+            assert got[q] == base[q], (key, q)
+
+
 def test_coalesce_pads_variable_peak_lists():
     batch = coalesce_queries([_spec(10.0, n_peaks=2), _spec(20.0, n_peaks=5)])
     assert batch.mz.shape == (2, 5)
