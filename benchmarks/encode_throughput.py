@@ -31,7 +31,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from benchmarks.fused_vs_matrix import max_intermediate_bytes
+from repro.analysis.jaxpr_walk import max_intermediate_bytes
 from repro.core import encode_backends
 from repro.core.encoding import PreprocessParams, make_codebooks
 

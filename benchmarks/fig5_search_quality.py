@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit
 from repro.core import OMSConfig, OMSPipeline
 from repro.core.baselines import (bin_spectra_dense, shifted_cosine,
                                   spectrast_dot)

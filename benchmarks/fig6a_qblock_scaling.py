@@ -8,7 +8,6 @@ trade-off.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, timeit
 from benchmarks.table2_design_outline import vmem_usage

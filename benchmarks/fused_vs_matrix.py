@@ -10,53 +10,20 @@ the largest intermediate each one materialises outside a Pallas kernel —
 structural evidence that the fused path never allocates the (Qb, Rk·max_r)
 score matrix, not just a wall-clock comparison (CPU interpret-mode timing of
 Pallas kernels is not representative of TPU; the memory story is exact).
+
+The jaxpr traversal is :mod:`repro.analysis.jaxpr_walk` — the SAME walker
+the contract analyzer (`oms.py analyze`) trusts, so benchmark claims and
+machine-checked contracts can never drift apart.
 """
 from __future__ import annotations
-
-import numpy as np
 
 import jax
 
 from benchmarks.common import emit, timeit
+from repro.analysis.jaxpr_walk import find_shape_carriers, max_intermediate_bytes
 from repro.core import OMSConfig, OMSPipeline
 from repro.core import search as search_mod
 from repro.data.spectra import LibraryConfig, make_dataset
-
-
-def _iter_subjaxprs(params):
-    for v in params.values():
-        vals = v if isinstance(v, (tuple, list)) else (v,)
-        for u in vals:
-            if hasattr(u, "jaxpr"):        # ClosedJaxpr
-                yield u.jaxpr
-            elif hasattr(u, "eqns"):       # Jaxpr
-                yield u
-
-
-def _walk_shapes(closed_jaxpr):
-    """Yield (shape, dtype) of every eqn output, recursing into sub-jaxprs
-    but NOT into pallas_call bodies (whose tiles live in VMEM by
-    construction — that is the point of the fused kernel)."""
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                continue
-            for v in eqn.outvars:
-                aval = getattr(v, "aval", None)
-                shape = getattr(aval, "shape", None)
-                dtype = getattr(aval, "dtype", None)
-                if shape is not None and dtype is not None:
-                    yield shape, dtype
-            for sub in _iter_subjaxprs(eqn.params):
-                yield from walk(sub)
-
-    yield from walk(closed_jaxpr.jaxpr)
-
-
-def max_intermediate_bytes(closed_jaxpr) -> int:
-    return max((int(np.prod(s, dtype=np.int64)) * np.dtype(d).itemsize
-                for s, d in _walk_shapes(closed_jaxpr)), default=0)
 
 
 def materialises_score_matrix(closed_jaxpr, qb: int, rk: int) -> bool:
@@ -64,8 +31,7 @@ def materialises_score_matrix(closed_jaxpr, qb: int, rk: int) -> bool:
     q-block and the scanned-rows dimension — i.e. a (Qb, Rk[, W])-shaped
     score/xor matrix. The streamed (Rk, W) reference slice itself does not
     count: both paths must load the references."""
-    return any(len(s) >= 2 and qb in s and rk in s
-               for s, _ in _walk_shapes(closed_jaxpr))
+    return bool(find_shape_carriers(closed_jaxpr, (qb, rk)))
 
 
 def main():

@@ -1,0 +1,115 @@
+"""Committed perf trajectory: append benchmark rows, gate on regression.
+
+``BENCH_history/*.jsonl`` holds one JSON row per line in the exact schema
+``benchmarks/common.write_json`` emits (name, us_per_call, derived,
+git_rev, timestamp). The files are COMMITTED — the perf trajectory lives
+in-repo (ROADMAP), so a perf PR's before/after is part of its diff, not a
+CI artifact that expires.
+
+    # gate a fresh run against the last committed row per benchmark name
+    python -m benchmarks.history check BENCH_history/encode.jsonl BENCH_encode.json
+
+    # same gate, then append the fresh rows (exit 1 WITHOUT appending on
+    # regression — a regressed row must not bury the baseline it broke)
+    python -m benchmarks.history append BENCH_history/encode.jsonl BENCH_encode.json
+
+The gate: a row regresses when its ``us_per_call`` exceeds the LAST
+committed row of the same name by more than ``--max-regress`` (default
+0.25, i.e. >25%). Rows under ``--min-us`` (default 100us) on either side
+are exempt — micro-rows are timer noise, not signal — as are ERROR
+sentinels (0.0) and names with no committed baseline (first appearance).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_history(path: str) -> dict[str, dict]:
+    """{name: last committed row} — later lines win."""
+    last: dict[str, dict] = {}
+    if not os.path.exists(path):
+        return last
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                row = json.loads(line)
+                last[row["name"]] = row
+    return last
+
+
+def load_run(path: str) -> list[dict]:
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        raise SystemExit(f"{path}: expected a JSON list of benchmark rows")
+    return data
+
+
+def compare(baseline: dict[str, dict], rows: list[dict], *,
+            max_regress: float = 0.25, min_us: float = 100.0) -> list[str]:
+    """Regression messages (empty = gate passes)."""
+    problems = []
+    for row in rows:
+        name, us = row["name"], float(row["us_per_call"])
+        if row.get("derived") == "ERROR":
+            problems.append(f"{name}: benchmark errored (ERROR sentinel)")
+            continue
+        base = baseline.get(name)
+        if base is None:
+            continue                      # first appearance: becomes baseline
+        base_us = float(base["us_per_call"])
+        if us <= min_us or base_us <= min_us:
+            continue                      # micro-rows are timer noise
+        if us > base_us * (1.0 + max_regress):
+            problems.append(
+                f"{name}: {us:.1f}us vs committed {base_us:.1f}us "
+                f"({us / base_us:.2f}x > {1 + max_regress:.2f}x allowed, "
+                f"baseline {base.get('git_rev', '?')})")
+    return problems
+
+
+def append_rows(path: str, rows: list[dict]) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "a") as f:
+        for row in rows:
+            f.write(json.dumps(row, sort_keys=True) + "\n")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("mode", choices=("check", "append"))
+    ap.add_argument("history", help="committed BENCH_history/<suite>.jsonl")
+    ap.add_argument("run_json", help="fresh benchmarks/run.py --json output")
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="allowed fractional slowdown vs last committed row")
+    ap.add_argument("--min-us", type=float, default=100.0,
+                    help="rows at/below this on either side are exempt")
+    args = ap.parse_args(argv)
+
+    baseline = load_history(args.history)
+    rows = load_run(args.run_json)
+    problems = compare(baseline, rows, max_regress=args.max_regress,
+                       min_us=args.min_us)
+    gated = sum(1 for r in rows
+                if r["name"] in baseline
+                and float(r["us_per_call"]) > args.min_us)
+    print(f"[history] {len(rows)} row(s) vs {args.history} "
+          f"({len(baseline)} baseline name(s), {gated} gated)")
+    if problems:
+        for p in problems:
+            print(f"[history] REGRESSION {p}")
+        return 1
+    if args.mode == "append":
+        append_rows(args.history, rows)
+        print(f"[history] appended {len(rows)} row(s) to {args.history}")
+    else:
+        print("[history] gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,7 +11,7 @@ import json
 import os
 
 from benchmarks.common import emit
-from repro.utils.roofline import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, PEAK_OPS_INT8
+from repro.utils.roofline import HBM_BW, ICI_BW, PEAK_OPS_INT8
 
 
 def lm_table(out_dir="results/dryrun"):

@@ -11,9 +11,9 @@ Both claims are measured here on the same store:
     (one ``search_encoded`` over the whole query batch);
   * the peak device footprint, computed *structurally*: library/slab
     resident bytes (pytree leaf bytes) plus the largest intermediate the
-    traced scan materialises — the jaxpr-walk tooling from
-    ``benchmarks.fused_vs_matrix`` — so the memory story is exact even
-    where CPU timing of TPU-shaped code is not representative.
+    traced scan materialises — via :mod:`repro.analysis.jaxpr_walk`, the
+    same walker the contract analyzer trusts — so the memory story is
+    exact even where CPU timing of TPU-shaped code is not representative.
 
 The final row asserts the acceptance property: streaming peak device bytes
 are a function of the slab size, not the library size.
@@ -31,7 +31,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from benchmarks.fused_vs_matrix import max_intermediate_bytes
+from repro.analysis.jaxpr_walk import max_intermediate_bytes
 from repro.core import OMSConfig, OMSPipeline
 from repro.core import search as search_mod
 from repro.data.spectra import LibraryConfig, make_dataset

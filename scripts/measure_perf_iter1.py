@@ -18,9 +18,10 @@ def measure(arch, shape, tag, mutate=None):
     mesh = make_production_mesh()
     cell = make_cell(arch, shape, mesh=mesh, n_microbatches=4)
     step = make_step_fn(cell, n_microbatches=4)
-    sh = lambda t: jax.tree_util.tree_map(
-        lambda s: NamedSharding(mesh, s), t,
-        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    def sh(t):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
     j = jax.jit(step, in_shardings=tuple(sh(s) for s in cell.in_specs),
                 donate_argnums=cell.donate)
     with mesh:

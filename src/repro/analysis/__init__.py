@@ -1,0 +1,31 @@
+"""Static analysis of the repro's jitted hot paths.
+
+Machine-checked contracts (memory, transfer, dtype, recompile) over traced
+jaxprs — see :mod:`repro.analysis.registry` for the declaration API,
+:mod:`repro.analysis.contracts` for the checkers,
+:mod:`repro.analysis.jaxpr_walk` for the shared traversal and
+:mod:`repro.analysis.imports` for the import-graph check.
+
+The matrix driver lives in :mod:`repro.analysis.runner` and is deliberately
+NOT imported here: the runner imports ``repro.core``, while
+``repro.core.backends`` imports :mod:`repro.analysis.registry` at module
+level — importing it from the package root would close that loop. Reach it
+as ``from repro.analysis import runner`` (or via ``oms.py analyze``).
+"""
+from repro.analysis import contracts, imports, jaxpr_walk, registry
+from repro.analysis.contracts import ContractResult, RecompileGuard
+from repro.analysis.jaxpr_walk import (aval_bytes, find_shape_carriers,
+                                       format_eqn, iter_eqns, iter_out_avals,
+                                       max_intermediate_bytes,
+                                       peak_intermediate)
+from repro.analysis.registry import (CONTRACT_NAMES, ContractDecl, contract,
+                                     declarations, declare, targets)
+
+__all__ = [
+    "contracts", "imports", "jaxpr_walk", "registry",
+    "ContractResult", "RecompileGuard",
+    "aval_bytes", "find_shape_carriers", "format_eqn", "iter_eqns",
+    "iter_out_avals", "max_intermediate_bytes", "peak_intermediate",
+    "CONTRACT_NAMES", "ContractDecl", "contract", "declarations", "declare",
+    "targets",
+]

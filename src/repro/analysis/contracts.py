@@ -1,0 +1,243 @@
+"""The five contract checkers — named, machine-checked invariants.
+
+Each checker takes a traced ``ClosedJaxpr`` (plus contract-specific
+context) and returns a :class:`ContractResult`; on failure the result
+carries the *offending equation* rendered through
+:func:`repro.analysis.jaxpr_walk.format_eqn`, so a violation report names
+the exact op that broke the dataflow story, not just "somewhere in the
+graph".
+
+The checkers are pure structural analysis (no execution, no compile) with
+one exception: :class:`RecompileGuard` tracks jit-cache growth across real
+calls, because abstract-signature churn is a *runtime* property of the
+serve loop, invisible to any single trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.analysis.jaxpr_walk import (find_shape_carriers, format_eqn,
+                                       iter_eqns, iter_out_avals,
+                                       peak_intermediate)
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractResult:
+    contract: str
+    target: str
+    passed: bool
+    detail: str = ""
+    eqn: str | None = None      # offending equation (failures only)
+
+    def as_dict(self) -> dict:
+        d = {"contract": self.contract, "target": self.target,
+             "passed": self.passed, "detail": self.detail}
+        if self.eqn is not None:
+            d["eqn"] = self.eqn
+        return d
+
+
+# ---------------------------------------------------------------------------
+# 1. no_materialize — the (Qb, Rk) score matrix never lands in HBM
+# ---------------------------------------------------------------------------
+
+
+def check_no_materialize(jaxpr, *, q_block: int, r_rows: int,
+                         target: str = "") -> ContractResult:
+    """No intermediate outside a Pallas kernel carries BOTH the q-block and
+    the scanned-rows dimension — i.e. a (Qb, Rk[, W])-shaped score/xor
+    matrix. The streamed (Rk, W) reference slice itself does not count:
+    every path must load the references it scans."""
+    hits = find_shape_carriers(jaxpr, (q_block, r_rows))
+    if hits:
+        return ContractResult(
+            "no_materialize", target, False,
+            f"{len(hits)} intermediate(s) carry both Qb={q_block} and "
+            f"Rk={r_rows} — a materialised score matrix",
+            eqn=format_eqn(hits[0]))
+    return ContractResult("no_materialize", target, True,
+                          f"no (Qb={q_block}, Rk={r_rows}) intermediate")
+
+
+# ---------------------------------------------------------------------------
+# 2. peak_intermediate <= bound
+# ---------------------------------------------------------------------------
+
+
+def check_peak_intermediate(jaxpr, *, bound_bytes: int,
+                            target: str = "") -> ContractResult:
+    peak, eqn = peak_intermediate(jaxpr)
+    detail = f"peak {peak} B vs bound {bound_bytes} B"
+    if peak > bound_bytes:
+        return ContractResult("peak_intermediate", target, False, detail,
+                              eqn=format_eqn(eqn) if eqn is not None else None)
+    return ContractResult("peak_intermediate", target, True, detail)
+
+
+# ---------------------------------------------------------------------------
+# 3. no_host_transfer — nothing crosses the host boundary inside the hot jit
+# ---------------------------------------------------------------------------
+
+# Primitives that move data across the host<->device boundary (or call back
+# into Python) from inside a traced program. A literal jax.device_get on a
+# tracer fails at trace time already; what CAN silently sneak into a jitted
+# hot loop is a callback (pure_callback / io_callback / debug.callback /
+# the legacy host_callback) or an explicit device_put with a placement.
+HOST_TRANSFER_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "outside_call", "host_callback_call", "device_put", "infeed", "outfeed",
+})
+
+
+def check_no_host_transfer(jaxpr, *, target: str = "",
+                           forbidden: frozenset = HOST_TRANSFER_PRIMS
+                           ) -> ContractResult:
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name in forbidden:
+            return ContractResult(
+                "no_host_transfer", target, False,
+                f"host-boundary primitive {eqn.primitive.name!r} inside the "
+                f"jitted hot path", eqn=format_eqn(eqn))
+    return ContractResult("no_host_transfer", target, True,
+                          "no callback/device_put/infeed ops")
+
+
+# ---------------------------------------------------------------------------
+# 4. dtype_stability — no silent 64-bit promotion; packed HVs stay uint32
+# ---------------------------------------------------------------------------
+
+
+def check_dtype_stability(jaxpr, *, target: str = "",
+                          hv_words: int | None = None) -> ContractResult:
+    """Two clauses:
+
+    * no equation output anywhere in the traced graph is 64-bit wide
+      (int64/uint64/float64/complex128) — the silent-promotion detector
+      (under default x64-disabled jax this also catches code that would
+      promote the moment x64 is enabled);
+    * with ``hv_words`` given: every >=2-D *unsigned-integer* intermediate
+      whose trailing dimension is the packed word count must be uint32 —
+      packed HVs never change carrier dtype on their way to the
+      XOR/popcount. (Unsigned only: signed (.., W) tensors are popcount
+      results, not HV carriers.)
+    """
+    for shape, dtype, eqn in iter_out_avals(jaxpr):
+        dt = np.dtype(dtype)
+        if dt.kind in "iufc" and dt.itemsize >= 8:
+            return ContractResult(
+                "dtype_stability", target, False,
+                f"64-bit intermediate {dt.name}{list(shape)} in the traced "
+                f"graph", eqn=format_eqn(eqn))
+        if (hv_words is not None and len(shape) >= 2
+                and shape[-1] == hv_words and dt.kind == "u"
+                and dt != np.uint32):
+            return ContractResult(
+                "dtype_stability", target, False,
+                f"packed-HV-shaped intermediate [..., {hv_words}] changed "
+                f"carrier dtype to {dt.name}", eqn=format_eqn(eqn))
+    return ContractResult("dtype_stability", target, True,
+                          "all intermediates < 64-bit"
+                          + ("" if hv_words is None
+                             else f"; [..., {hv_words}] words stay uint32"))
+
+
+# ---------------------------------------------------------------------------
+# 5. recompile_guard — runtime jit-cache-miss tracker
+# ---------------------------------------------------------------------------
+
+
+def _cache_size(fn) -> int:
+    get = getattr(fn, "_cache_size", None)
+    if callable(get):
+        try:
+            return int(get())
+        except Exception:
+            return 0
+    return 0
+
+
+class RecompileGuard:
+    """Tracks jit-cache growth of a set of jitted callables across calls.
+
+    Usage: construct over the hot jitted functions, run the warmup call(s),
+    ``arm()``, run the steady-state call(s), then ``check()`` — any cache
+    growth after arming means the serve loop's abstract signatures churn
+    per call (shape/dtype/static-arg instability), i.e. every request pays
+    an XLA compile.
+    """
+
+    def __init__(self, fns: Sequence[tuple[str, Callable]]):
+        self.fns = list(fns)
+        self._armed: dict[str, int] | None = None
+
+    def arm(self) -> None:
+        self._armed = {name: _cache_size(fn) for name, fn in self.fns}
+
+    def churn(self) -> dict[str, int]:
+        if self._armed is None:
+            raise RuntimeError("RecompileGuard.churn() before arm()")
+        out = {}
+        for name, fn in self.fns:
+            delta = _cache_size(fn) - self._armed[name]
+            if delta > 0:
+                out[name] = delta
+        return out
+
+    def check(self, *, target: str = "") -> ContractResult:
+        churn = self.churn()
+        if churn:
+            worst = max(churn, key=churn.get)
+            return ContractResult(
+                "recompile_guard", target, False,
+                "jit cache grew on repeated same-shape calls: "
+                + ", ".join(f"{k}(+{v})" for k, v in churn.items()),
+                eqn=f"recompiled: {worst}")
+        tracked = ", ".join(name for name, _ in self.fns)
+        return ContractResult("recompile_guard", target, True,
+                              f"no cache growth across repeat calls "
+                              f"({tracked})")
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: evaluate one declaration against a trace + context
+# ---------------------------------------------------------------------------
+
+
+def evaluate(decl, jaxpr, ctx: dict[str, Any]) -> ContractResult:
+    """Run the checker a :class:`~repro.analysis.registry.ContractDecl`
+    names. ``ctx`` carries the smoke-shape facts (q_block, rk, n_words,
+    ...); ``recompile_guard`` is runtime-only and handled by the runner."""
+    if decl.contract == "no_materialize":
+        res = check_no_materialize(jaxpr, q_block=ctx["q_block"],
+                                   r_rows=ctx["rk"], target=decl.target)
+    elif decl.contract == "peak_intermediate":
+        res = check_peak_intermediate(jaxpr, bound_bytes=int(decl.bound(ctx)),
+                                      target=decl.target)
+    elif decl.contract == "no_host_transfer":
+        res = check_no_host_transfer(jaxpr, target=decl.target)
+    elif decl.contract == "dtype_stability":
+        res = check_dtype_stability(jaxpr, target=decl.target,
+                                    hv_words=ctx.get("n_words"))
+    else:
+        raise ValueError(f"evaluate() cannot run {decl.contract!r}")
+    return _apply_expectation(decl, res)
+
+
+def _apply_expectation(decl, res: ContractResult) -> ContractResult:
+    """Fold a declaration's ``expect`` flag into the result: an expected
+    violation (documented exemption) passes with a note; an exemption that
+    unexpectedly PASSES is flagged for cleanup."""
+    if decl.expect:
+        return res
+    if res.passed:
+        return dataclasses.replace(
+            res, passed=False,
+            detail=res.detail + " — declared exempt but now passes; "
+                                "remove the stale exemption")
+    return dataclasses.replace(
+        res, passed=True,
+        detail=res.detail + f" — documented exemption ({decl.note})",
+        eqn=res.eqn)

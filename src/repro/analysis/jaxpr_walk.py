@@ -1,0 +1,130 @@
+"""The ONE jaxpr walker — every structural memory/dtype question repo-wide
+goes through here.
+
+Three benchmarks (fused_vs_matrix, stream_throughput, encode_throughput)
+used to carry copy-pasted jaxpr walks; the contract analyzer
+(:mod:`repro.analysis.contracts`) needs the same traversal to be
+*trustworthy*, so there is exactly one implementation:
+
+  * :func:`iter_eqns` — depth-first over every equation of a (closed)
+    jaxpr, recursing into sub-jaxprs carried in ``eqn.params`` (scan/map
+    bodies, cond branches, jit calls). ``pallas_call`` bodies are NOT
+    entered by default: their tiles live in VMEM by construction — that is
+    the point of a fused kernel — so their intermediates are not device
+    (HBM) allocations.
+  * :func:`iter_out_avals` — (shape, dtype, eqn) of every equation output.
+  * :func:`max_intermediate_bytes` — the largest single intermediate the
+    traced program materialises outside a Pallas kernel.
+  * :func:`find_shape_carriers` — equations whose output carries ALL of a
+    set of dimension sizes (e.g. both the q-block and the scanned-rows
+    dimension: a (Qb, Rk[, W]) score/xor matrix).
+  * :func:`format_eqn` — a readable one-line rendering of an offending
+    equation for contract-failure reports.
+
+Imports only jax/numpy — safe to import from anywhere in the repo
+(including ``benchmarks``) without dragging in ``repro.core``.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+
+def _as_jaxpr(j):
+    """Accept ClosedJaxpr, Jaxpr, or anything exposing ``.jaxpr``."""
+    inner = getattr(j, "jaxpr", None)
+    return inner if inner is not None else j
+
+
+def _sub_jaxprs(params: dict):
+    """Sub-jaxprs carried in an equation's params (scan/map/cond/jit...)."""
+    for v in params.values():
+        vals = v if isinstance(v, (tuple, list)) else (v,)
+        for u in vals:
+            if hasattr(u, "jaxpr"):        # ClosedJaxpr
+                yield u.jaxpr
+            elif hasattr(u, "eqns"):       # Jaxpr
+                yield u
+
+
+def iter_eqns(jaxpr, *, enter_pallas: bool = False) -> Iterator:
+    """Yield every equation, depth-first, recursing into sub-jaxprs.
+
+    ``enter_pallas=False`` (the default) skips the bodies of
+    ``pallas_call`` equations — the call itself is still yielded (its
+    *outputs* are real device arrays), only the in-kernel VMEM schedule is
+    opaque.
+    """
+    j = _as_jaxpr(jaxpr)
+    for eqn in j.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call" and not enter_pallas:
+            continue
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub, enter_pallas=enter_pallas)
+
+
+def iter_out_avals(jaxpr, *, enter_pallas: bool = False
+                   ) -> Iterator[tuple[tuple, object, object]]:
+    """(shape, dtype, eqn) of every equation output with an array aval."""
+    for eqn in iter_eqns(jaxpr, enter_pallas=enter_pallas):
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            shape = getattr(aval, "shape", None)
+            dtype = getattr(aval, "dtype", None)
+            if shape is not None and dtype is not None:
+                yield shape, dtype, eqn
+
+
+def aval_bytes(shape, dtype) -> int:
+    return int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+
+
+def max_intermediate_bytes(jaxpr) -> int:
+    """Largest single intermediate materialised outside a Pallas kernel."""
+    return max((aval_bytes(s, d) for s, d, _ in iter_out_avals(jaxpr)),
+               default=0)
+
+
+def peak_intermediate(jaxpr) -> tuple[int, object | None]:
+    """(bytes, eqn) of the largest intermediate (eqn None on empty jaxprs)."""
+    best, best_eqn = 0, None
+    for s, d, eqn in iter_out_avals(jaxpr):
+        b = aval_bytes(s, d)
+        if b > best:
+            best, best_eqn = b, eqn
+    return best, best_eqn
+
+
+def find_shape_carriers(jaxpr, dims: tuple[int, ...], *,
+                        min_rank: int = 2) -> list:
+    """Equations whose output shape carries EVERY size in ``dims``.
+
+    The materialisation detector: an intermediate shaped (Qb, Rk[, W])
+    carries both the q-block and the scanned-rows extent — a score/xor
+    matrix. The streamed (Rk, W) reference slice alone does not trip it:
+    both paths must load the references.
+    """
+    hits = []
+    for s, _, eqn in iter_out_avals(jaxpr):
+        if len(s) >= min_rank and all(d in s for d in dims):
+            hits.append(eqn)
+    return hits
+
+
+def format_eqn(eqn, limit: int = 200) -> str:
+    """One readable line: primitive, output avals, source provenance."""
+    outs = ", ".join(str(getattr(v, "aval", "?")) for v in eqn.outvars)
+    src = ""
+    si = getattr(eqn, "source_info", None)
+    if si is not None:
+        try:
+            import jax._src.source_info_util as siu
+            frame = siu.user_frame(si.traceback)
+            if frame is not None:
+                src = f" @ {frame.file_name}:{frame.start_line}"
+        except Exception:
+            src = ""
+    text = f"{eqn.primitive.name} -> {outs}{src}"
+    return text if len(text) <= limit else text[:limit - 3] + "..."

@@ -1,0 +1,302 @@
+"""Contract-matrix driver: trace every hot path, check every declaration.
+
+``python -m repro.launch.oms analyze`` lands here. The runner builds one
+smoke-scale fixture (synthetic library -> in-memory pipeline + on-disk
+store), then for every registered (encode backend x search backend x
+resident/streamed x cascade on/off) combination:
+
+  * traces the path's jitted hot function(s) with ``jax.make_jaxpr`` (no
+    compile, no accelerator needed — CPU/interpret is exact for the
+    *structural* contracts);
+  * evaluates every :mod:`repro.analysis.registry` declaration whose
+    target the combination exercises;
+  * runs the ``recompile_guard`` (the one runtime contract) by calling
+    the real resident/streamed search twice with same-shaped batches and
+    asserting zero jit-cache growth on the repeat call.
+
+Traces are memoized per unique (target, path) key — an encode backend
+does not change the search jaxpr — so the full N-combination report costs
+one trace per distinct hot function, not one per combination row.
+
+The JSON report names, for every combination, each contract's pass/fail
+and (on failure) the offending jaxpr equation; :func:`run` returns it and
+the CLI exits nonzero if any non-exempt contract fails.
+"""
+from __future__ import annotations
+
+import dataclasses
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.analysis import contracts as C
+from repro.analysis import registry
+
+
+@dataclasses.dataclass(frozen=True)
+class SmokeShapes:
+    """Small enough to trace everything in seconds, large enough that the
+    contract dimensions (q-block, scanned rows, word count, word tile)
+    are all DISTINCT sizes — shape-membership tests must not collide."""
+
+    dim: int = 512           # n_words = 16
+    n_levels: int = 8
+    max_r: int = 64
+    q_block: int = 8
+    top_k: int = 2
+    n_refs: int = 768
+    n_queries: int = 32
+    encode_batch: int = 16
+    slab_rows: int = 128     # 2 blocks per slab
+    narrow_tol_da: float = 1.0
+    seed: int = 3
+
+    @property
+    def n_words(self) -> int:
+        return self.dim // 32
+
+
+def _encode_ctx(sm: SmokeShapes, peaks: int, n_bins: int) -> dict[str, Any]:
+    return {"dim": sm.dim, "n_words": sm.n_words, "batch": sm.encode_batch,
+            "peaks": peaks, "n_levels": sm.n_levels, "n_bins": n_bins,
+            "word_tile": min(8, sm.n_words)}
+
+
+def _search_ctx(sm: SmokeShapes, rk: int, **extra) -> dict[str, Any]:
+    return {"dim": sm.dim, "n_words": sm.n_words, "q_block": sm.q_block,
+            "rk": rk, "top_k": sm.top_k, **extra}
+
+
+def _eval_decls(target: str, jaxpr, ctx) -> list[C.ContractResult]:
+    return [C.evaluate(d, jaxpr, ctx) for d in registry.declarations(target)
+            if d.contract != "recompile_guard"]
+
+
+class _Fixture:
+    """One smoke dataset + resident pipeline + streamed pipeline (tmp store)."""
+
+    def __init__(self, sm: SmokeShapes):
+        from repro.core import OMSConfig, OMSPipeline
+        from repro.data.spectra import LibraryConfig, make_dataset
+
+        self.sm = sm
+        self.cfg = OMSConfig(dim=sm.dim, n_levels=sm.n_levels, max_r=sm.max_r,
+                             q_block=sm.q_block, top_k=sm.top_k,
+                             encode_batch=sm.encode_batch, seed=sm.seed)
+        self.ds = make_dataset(LibraryConfig(n_refs=sm.n_refs,
+                                             n_queries=sm.n_queries,
+                                             seed=sm.seed))
+        self.tmp = tempfile.mkdtemp(prefix="oms-analyze-")
+        store = OMSPipeline.ingest(self.cfg, self.ds.refs,
+                                   f"{self.tmp}/store")
+        self.resident = OMSPipeline.from_store(store, self.cfg)
+        self.streamed = OMSPipeline.from_store(store, self.cfg,
+                                               resident=False,
+                                               slab_rows=sm.slab_rows)
+        hvs, qp, qc = self.resident.encode_queries(self.ds.queries)
+        self.q = (hvs, qp, qc)
+        self.qp_np = np.asarray(qp)
+        self.qc_np = np.asarray(qc)
+
+    def close(self):
+        shutil.rmtree(self.tmp, ignore_errors=True)
+
+    # -- padded query layout (what the blocked scan actually consumes) -----
+    def padded_queries(self):
+        from repro.core.search import sort_pad_plan
+        hvs, qp, qc = self.q
+        gather, _ = sort_pad_plan(qp, qc, self.sm.q_block,
+                                  q_charge_np=self.qc_np)
+        return hvs[gather], qp[gather], qc[gather]
+
+
+# ---------------------------------------------------------------------------
+# Per-axis trace+check passes (memoized by construction: called once each)
+# ---------------------------------------------------------------------------
+
+
+def _encode_results(fx: _Fixture) -> dict[str, list[C.ContractResult]]:
+    """Trace ``preprocess_encode`` per registered encode backend."""
+    from repro.core import encode_backends
+
+    qs = fx.ds.queries
+    peaks = int(qs.mz.shape[1])
+    out: dict[str, list[C.ContractResult]] = {}
+    for name in encode_backends.names():
+        def trace(mz, inten, pmz, charge, backend=name):
+            return encode_backends.preprocess_encode(
+                mz, inten, pmz, charge, fx.resident.codebooks,
+                fx.cfg.preprocess_params, backend=backend,
+                batch=fx.sm.encode_batch)
+
+        jaxpr = jax.make_jaxpr(trace)(qs.mz, qs.intensity, qs.pmz, qs.charge)
+        out[name] = _eval_decls(f"encode:{name}", jaxpr,
+                                _encode_ctx(fx.sm, peaks, fx.cfg.n_bins))
+    return out
+
+
+def _trace_search(fx: _Fixture, db, params):
+    from repro.core import search as search_mod
+    qh, qp, qc = fx.padded_queries()
+    return jax.make_jaxpr(
+        lambda d, a, b, c: search_mod._search_sorted_padded(
+            d, a, b, c, params=params, dim=fx.sm.dim))(db, qh, qp, qc)
+
+
+def _search_results(fx: _Fixture) -> dict[tuple, list[C.ContractResult]]:
+    """Trace the blocked scan per (search backend, path, stage) and check
+    the backend's declarations at that path's scanned-rows extent.
+
+    Keys: (backend, "resident"|"streamed", "open"|"narrow").
+    """
+    from repro.core import backends
+    from repro.core.search import narrow_search_params
+    from repro.serve.slabs import slab_arrays
+
+    sm = fx.sm
+    base = fx.resident.search_params(fx.qp_np, fx.qc_np)
+    narrow = narrow_search_params(fx.resident.db, fx.qp_np, fx.qc_np, base,
+                                  narrow_tol_da=sm.narrow_tol_da)
+    eng = fx.streamed.engine
+    slab = slab_arrays(eng.layout, 0, eng.plan)
+    slab_cap = eng.plan.slab_blocks
+
+    out: dict[tuple, list[C.ContractResult]] = {}
+    for be in backends.names():
+        for stage, p in (("open", base), ("narrow", narrow)):
+            pr = p._replace(backend=be)
+            rk = pr.k_blocks * sm.max_r
+            jaxpr = _trace_search(fx, fx.resident.db, pr)
+            out[(be, "resident", stage)] = _eval_decls(
+                f"search:{be}", jaxpr, _search_ctx(sm, rk))
+
+            ps = pr._replace(k_blocks=min(pr.k_blocks, slab_cap))
+            rk_s = ps.k_blocks * sm.max_r
+            jaxpr_s = _trace_search(fx, slab, ps)
+            ctx_s = _search_ctx(sm, rk_s, slab_rows=eng.plan.slab_rows)
+            res = _eval_decls(f"search:{be}", jaxpr_s, ctx_s)
+            res += _eval_decls("serve:slab_step", jaxpr_s, ctx_s)
+            out[(be, "streamed", stage)] = res
+    return out
+
+
+def _merge_step_results(fx: _Fixture) -> list[C.ContractResult]:
+    """The streamed path's cross-slab fold (offset + merge_topk) is part of
+    the slab step's device program — same contracts, tiny trace."""
+    from repro.serve.engine import _merge_partials, _offset_rows
+
+    sm = fx.sm
+    Q = fx.qp_np.shape[0]
+    part = tuple(np.zeros((Q, sm.top_k), np.int32) for _ in range(4))
+    j1 = jax.make_jaxpr(
+        lambda *a: _offset_rows(*a, np.int32(64)))(*part)
+    j2 = jax.make_jaxpr(
+        lambda r, p: _merge_partials(r, p, sm.top_k))(part, part)
+    out = []
+    for j in (j1, j2):
+        out.append(C.check_no_host_transfer(j, target="serve:slab_step"))
+        out.append(C.check_dtype_stability(j, target="serve:slab_step",
+                                           hv_words=sm.n_words))
+    return out
+
+
+def _recompile_results(fx: _Fixture) -> dict[str, list[C.ContractResult]]:
+    """The runtime contract: repeated same-shaped serve calls must be free
+    of jit-cache growth. One warmup + one armed call per (backend, path)."""
+    from repro.core import backends, encode_backends
+    from repro.core import search as search_mod
+    from repro.serve import engine as engine_mod
+
+    hvs, qp, qc = fx.q
+    tracked = [
+        ("search._search_sorted_padded", search_mod._search_sorted_padded),
+        ("engine._offset_rows", engine_mod._offset_rows),
+        ("engine._merge_partials", engine_mod._merge_partials),
+        ("encode._preprocess_jit", encode_backends._preprocess_jit),
+        ("encode._encode_batched_jit", encode_backends._encode_batched_jit),
+    ]
+    out: dict[str, list[C.ContractResult]] = {}
+    for be in backends.names():
+        results = []
+        for path, pipe in (("resident", fx.resident),
+                           ("streamed", fx.streamed)):
+            guard = C.RecompileGuard(tracked)
+            pipe.search_encoded(hvs, qp, qc, backend=be)     # warmup/compile
+            guard.arm()
+            pipe.search_encoded(hvs, qp, qc, backend=be)     # steady state
+            results.append(guard.check(target=f"serve:loop[{path}:{be}]"))
+        out[be] = results
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Assembly
+# ---------------------------------------------------------------------------
+
+
+def run(sm: SmokeShapes | None = None, *,
+        with_recompile: bool = True) -> dict:
+    """Full contract matrix -> JSON-able report dict (see module docstring)."""
+    sm = sm or SmokeShapes()
+    fx = _Fixture(sm)
+    try:
+        enc = _encode_results(fx)
+        srch = _search_results(fx)
+        merge_res = _merge_step_results(fx)
+        reco = _recompile_results(fx) if with_recompile else {}
+    finally:
+        fx.close()
+
+    combos = []
+    for e in sorted(enc):
+        for (be, path, stage) in sorted(srch):
+            cascade = stage == "narrow"
+            results = list(enc[e]) + list(srch[(be, path, stage)])
+            if path == "streamed":
+                results += merge_res
+            if not cascade and be in reco:
+                results += [r for r in reco[be]
+                            if f"[{path}:" in r.target]
+            combos.append({
+                "encode": e, "search": be, "path": path,
+                "cascade": cascade,
+                "contracts": [r.as_dict() for r in results],
+                "passed": all(r.passed for r in results),
+            })
+
+    n_checks = sum(len(c["contracts"]) for c in combos)
+    failed = [c for c in combos if not c["passed"]]
+    return {
+        "smoke": dataclasses.asdict(sm),
+        "n_combinations": len(combos),
+        "n_checks": n_checks,
+        "n_failed_combinations": len(failed),
+        "combos": combos,
+        "ok": not failed,
+    }
+
+
+def summarize(report: dict) -> str:
+    """Human-readable digest of a :func:`run` report."""
+    lines = [f"[analyze] {report['n_combinations']} combinations, "
+             f"{report['n_checks']} contract checks"]
+    seen: set[tuple] = set()
+    for combo in report["combos"]:
+        for r in combo["contracts"]:
+            if r["passed"]:
+                continue
+            key = (r["target"], r["contract"], r.get("eqn"))
+            if key in seen:
+                continue
+            seen.add(key)
+            lines.append(f"  FAIL {r['target']} :: {r['contract']} — "
+                         f"{r['detail']}")
+            if r.get("eqn"):
+                lines.append(f"       offending eqn: {r['eqn']}")
+    lines.append("[analyze] " + ("ALL CONTRACTS HOLD" if report["ok"] else
+                                 f"{report['n_failed_combinations']} "
+                                 f"combination(s) FAILED"))
+    return "\n".join(lines)

@@ -35,6 +35,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+# Dependency-free registry (stdlib only) — safe at module level, checked by
+# `oms.py analyze --imports`.
+from repro.analysis.registry import declare as _declare
 from repro.core import packing
 
 MATRIX = "matrix"
@@ -107,3 +110,87 @@ register("kernel_vpu", MATRIX, _kernel_vpu)
 register("kernel_mxu", MATRIX, _kernel_mxu)
 register("fused", FUSED, _fused_pallas)
 register("fused_xla", FUSED, _fused_xla)
+
+
+# ---------------------------------------------------------------------------
+# Contracts — the memory/transfer/dtype story of each backend, declared next
+# to its registration and machine-checked by `oms.py analyze` (the runner
+# traces one blocked-scan step per backend and evaluates these; see
+# repro.analysis). Registering a new backend without declaring its peak
+# footprint leaves it unchecked — declare or the analyze matrix won't cover
+# it.
+# ---------------------------------------------------------------------------
+
+def _declare_common(target: str) -> None:
+    _declare(target, "no_host_transfer")
+    _declare(target, "dtype_stability")
+
+
+for _t in ("search:vpu", "search:mxu", "search:kernel_vpu",
+           "search:kernel_mxu", "search:fused", "search:fused_xla"):
+    _declare_common(_t)
+
+# Peak device intermediate of ONE blocked-scan step, as a function of the
+# trace context (q_block, rk = scanned rows, n_words, dim). 4 = the widest
+# per-element carrier on each path (uint32 words / int32 counts). Pallas
+# paths pad Q/Rk up to the kernels' launch tiles before the call, so their
+# bounds are phrased over the PADDED extents (tile constants imported
+# lazily from the kernel wrappers — one source of truth with the kernels).
+
+
+def _pad_to(n: int, tile: int) -> int:
+    return -(-n // tile) * tile
+
+
+def _kernel_vpu_bound(c):
+    from repro.kernels.hamming.ops import Q_TILE, R_TILE
+    rk = _pad_to(c["rk"], R_TILE)
+    return max(_pad_to(c["q_block"], Q_TILE) * rk * 4,
+               rk * c["n_words"] * 4)
+
+
+def _kernel_mxu_bound(c):
+    from repro.kernels.hamming_mxu.ops import Q_TILE, R_TILE
+    rk = _pad_to(c["rk"], R_TILE)
+    return max(_pad_to(c["q_block"], Q_TILE) * rk * 4,
+               rk * c["n_words"] * 4)
+
+
+def _fused_bound(c):
+    from repro.kernels.hamming.ops import R_TILE
+    return _pad_to(c["rk"], R_TILE) * c["n_words"] * 4
+
+
+_declare("search:vpu", "peak_intermediate",
+         bound=lambda c: c["q_block"] * c["rk"] * c["n_words"] * 4,
+         note="packed XOR/popcount tensor (Qb, Rk, W)")
+_declare("search:mxu", "peak_intermediate",
+         bound=lambda c: c["rk"] * c["dim"] * 4,
+         note="bits_to_pm1 unpack (Rk, D) int32 before the int8 cast")
+_declare("search:kernel_vpu", "peak_intermediate",
+         bound=_kernel_vpu_bound,
+         note="Pallas tile kernel: tile-padded (Qb', Rk') int32 output / "
+              "(Rk', W) padded copy")
+_declare("search:kernel_mxu", "peak_intermediate",
+         bound=_kernel_mxu_bound,
+         note="Pallas MXU kernel: tile-padded (Qb', Rk') int32 output / "
+              "(Rk', W) padded copy")
+_declare("search:fused", "peak_intermediate",
+         bound=_fused_bound,
+         note="§II-C streaming kernel: the (Rk', W) tile-padded reference "
+              "slice is the largest HBM-resident array")
+_declare("search:fused_xla", "peak_intermediate",
+         bound=lambda c: c["q_block"] * c["rk"] * c["n_words"] * 4,
+         note="XLA fallback materialises the xor tensor like vpu")
+
+# The paper's single-pass kernel never materialises the (Qb, Rk) score
+# matrix; matrix-kind backends compute exactly that tile BY DESIGN, so the
+# contract is only declared on the fused backends. fused_xla is the
+# documented exemption: it is FUSED-kind (consumes windows, returns ranked
+# winners) but internally materialises the tile — it exists for
+# validation/debug, and the analyzer reports (rather than fails) it.
+_declare("search:fused", "no_materialize",
+         note="single-pass running top-k; tile lives in VMEM")
+_declare("search:fused_xla", "no_materialize", expect=False,
+         note="XLA reference reduction materialises the tile internally "
+              "by design (validation/debug backend)")

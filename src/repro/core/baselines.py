@@ -94,7 +94,6 @@ def shifted_cosine(q_vec, r_vec, q_pmz, r_pmz, q_charge, r_charge,
 
     Computed per query chunk to bound the (Q, R, bins) intermediate.
     """
-    n_bins = q_vec.shape[-1]
 
     def per_query(qv, qp, qc):
         delta_bins = jnp.round((qp - r_pmz) / bin_size).astype(jnp.int32)  # (R,)

@@ -37,6 +37,9 @@ from typing import Callable
 
 import jax
 
+# Dependency-free registry (stdlib only) — safe at module level, checked by
+# `oms.py analyze --imports`.
+from repro.analysis.registry import declare as _declare
 from repro.core import encoding
 from repro.core.encoding import (Codebooks, PreprocessParams,
                                  PreprocessedSpectra)
@@ -156,3 +159,49 @@ register("oracle", ENCODE, encoding.encode_spectra)
 register("word_tiled", ENCODE, _word_tiled)
 register("pallas", ENCODE, _pallas)
 register("fused", FUSED, _fused_preprocess_encode)
+
+
+# ---------------------------------------------------------------------------
+# Contracts — the encode hot path's memory/transfer/dtype story, declared
+# next to the registrations and machine-checked by `oms.py analyze` (the
+# runner traces preprocess_encode per backend; see repro.analysis).
+# ---------------------------------------------------------------------------
+
+for _t in ("encode:oracle", "encode:word_tiled", "encode:pallas",
+           "encode:fused"):
+    _declare(_t, "no_host_transfer")
+    _declare(_t, "dtype_stability")
+
+# Peak device intermediate of one encode chunk, over the trace context
+# (batch = spectra per chunk, peaks, dim, word_tile, n_bins). The oracle is
+# ALLOWED its (B, P, D) unpacked-bit tensor — that is what makes it the
+# oracle; the production schedules must stay word-tile-bounded:
+# (B, P, WT*32) int32. The word-tiled schedules also reshape the resident
+# ID codebook into word tiles — an (n_bins, W/WT, WT) view of an INPUT, so
+# the codebook's own footprint (already paid to hold it) is part of every
+# word-tiled bound, never a schedule blowup.
+
+
+def _codebook_bytes(c) -> int:
+    return c["n_bins"] * c["n_words"] * 4
+
+
+def _word_tile_bound(c):
+    return max(c["batch"] * c["peaks"] * c["word_tile"] * 32 * 4,
+               _codebook_bytes(c))
+
+
+_declare("encode:oracle", "peak_intermediate",
+         bound=lambda c: max(c["batch"] * c["peaks"] * c["dim"] * 4,
+                             _codebook_bytes(c)),
+         note="reference schedule: full (B, P, D) unpacked bits")
+for _t in ("encode:word_tiled", "encode:fused"):
+    _declare(_t, "peak_intermediate", bound=_word_tile_bound,
+             note="word-tiled schedule: (B, P, WT*32) unpacked-bit tile "
+                  "or the word-tiled codebook view")
+_declare("encode:pallas", "peak_intermediate",
+         bound=lambda c: max(c["batch"] * c["peaks"]
+                             * c["word_tile"] * 32 * 4,
+                             _codebook_bytes(c)),
+         note="hdencode kernel: codebooks stream to VMEM word tiles; "
+              "outside-kernel intermediates stay tile-bounded")

@@ -15,8 +15,6 @@ single-device search (same code path as the paper's per-SSD kernel).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -60,8 +58,6 @@ def sharded_search(db: ReferenceDB, q_hvs, q_pmz, q_charge,
     db = shard_reference_db(db, n_model)
     rows_per_shard = db.n_rows // n_model
     blocks_per_shard = db.n_blocks // n_model
-
-    data_spec = data_axes[0] if len(data_axes) == 1 else tuple(data_axes)
 
     db_specs = ReferenceDB(
         hvs=P(model_axis, None), pmz=P(model_axis), charge=P(model_axis),

@@ -39,7 +39,6 @@ def reshard_tree(tree, pspecs, new_mesh):
     `enforce_divisibility` rule the launchers use — elastic restart never
     fails on arithmetic, it just degrades sharding for the odd leaf.
     """
-    from jax.sharding import PartitionSpec as P
     from repro.distributed.sharding import enforce_divisibility
 
     fixed = enforce_divisibility(pspecs, tree, new_mesh)

@@ -12,11 +12,8 @@ DP×TP and enable PP only via --pipeline.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 def pipeline_forward(layer_fn, stage_params, x, *, n_stages: int,

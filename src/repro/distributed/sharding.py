@@ -17,7 +17,6 @@ fully distributed while params stay replicated over data for fast forward.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 # name -> spec for the trailing dims (len == expected trailing rank)

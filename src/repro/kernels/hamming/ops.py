@@ -10,6 +10,13 @@ from repro.kernels.hamming import hamming as _k
 
 PAD_PMZ = float(jnp.finfo(jnp.float32).max)
 
+# Default launch tiles. Inputs are padded up to these multiples before the
+# kernel call, so the padded copies (and the kernel's output tile) — not the
+# raw (Q, Rk) extents — are what bounds device memory; the peak_intermediate
+# contracts in repro.core.backends read these to stay honest about that.
+Q_TILE = 16
+R_TILE = 256
+
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
@@ -24,7 +31,7 @@ def _pad_rows(x, mult, value=0):
 
 
 @partial(jax.jit, static_argnames=("q_tile", "r_tile", "word_tile", "interpret"))
-def hamming_matrix(q, r, *, q_tile: int = 16, r_tile: int = 256,
+def hamming_matrix(q, r, *, q_tile: int = Q_TILE, r_tile: int = R_TILE,
                    word_tile: int = 16, interpret: bool | None = None):
     if interpret is None:
         interpret = _interpret_default()
@@ -46,7 +53,7 @@ def hamming_matrix(q, r, *, q_tile: int = 16, r_tile: int = 256,
                                    "interpret"))
 def fused_search(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge, *, dim: int,
                  k: int = 1, ppm_tol: float = 20.0, open_tol_da: float = 75.0,
-                 q_tile: int = 16, r_tile: int = 256, word_tile: int = 16,
+                 q_tile: int = Q_TILE, r_tile: int = R_TILE, word_tile: int = 16,
                  interpret: bool | None = None):
     """Fused dual-window top-k search; returns four (Q, k) int32 arrays."""
     if interpret is None:

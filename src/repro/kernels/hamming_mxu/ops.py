@@ -8,6 +8,12 @@ import jax.numpy as jnp
 
 from repro.kernels.hamming_mxu import hamming_mxu as _k
 
+# Default launch tiles (see repro.kernels.hamming.ops): inputs pad up to
+# these multiples, and the peak_intermediate contract bounds in
+# repro.core.backends account for the padded extents via these constants.
+Q_TILE = 32
+R_TILE = 256
+
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
@@ -15,7 +21,8 @@ def _interpret_default() -> bool:
 
 @partial(jax.jit, static_argnames=("dim", "q_tile", "r_tile", "word_tile",
                                    "interpret"))
-def hamming_matrix(q, r, dim: int, *, q_tile: int = 32, r_tile: int = 256,
+def hamming_matrix(q, r, dim: int, *, q_tile: int = Q_TILE,
+                   r_tile: int = R_TILE,
                    word_tile: int = 16, interpret: bool | None = None):
     if interpret is None:
         interpret = _interpret_default()

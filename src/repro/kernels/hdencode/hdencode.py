@@ -22,7 +22,6 @@ keeps it in VMEM is WT, exactly like FACTOR in the paper.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -28,10 +28,8 @@ from repro.configs.registry import get_config, list_archs
 from repro.configs.shapes import SHAPES, applicable
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import make_cell, make_step_fn
-from repro.utils import hlo as hlo_util
 from repro.utils import hlo_cost
 from repro.utils import roofline as rl
-from repro.utils.treeutil import tree_bytes
 
 
 def _sharded_arg_bytes(args, in_specs, mesh) -> float:

@@ -11,6 +11,12 @@ Entry points:
     — the streaming engine scans the store one bounded slab at a time;
   * ``queries`` — emit a synthetic query workload as JSON-lines (pipes into
     ``serve``);
+  * ``analyze`` — static contract analysis: trace every registered
+    (encode backend x search backend x resident/streamed x cascade)
+    combination at smoke shapes and machine-check the declared memory/
+    transfer/dtype/recompile contracts (see ``repro.analysis``); exits
+    nonzero on any non-exempt violation. ``--imports`` adds the
+    import-graph (cycle / leaf-module) check, ``--json`` dumps the report;
   * legacy one-shot (no subcommand): in-memory ingest + search, as before.
 
     PYTHONPATH=src python -m repro.launch.oms build --store /tmp/oms \\
@@ -382,6 +388,64 @@ def cmd_serve(argv) -> None:
               f"micro-batches{stats}{bad})", file=sys.stderr)
 
 
+def cmd_analyze(argv) -> None:
+    """Static contract analysis: trace every hot-path combination at smoke
+    shapes, check every declared contract, exit nonzero on violation."""
+    import os
+
+    from repro.analysis import imports as imports_mod
+    from repro.analysis import runner as runner_mod
+
+    ap = argparse.ArgumentParser(prog="repro.launch.oms analyze")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the full JSON report here ('-' for stdout)")
+    ap.add_argument("--imports", action="store_true",
+                    help="also run the import-graph check (cycle-free "
+                         "package, dependency-free leaf modules)")
+    ap.add_argument("--imports-only", action="store_true",
+                    help="run ONLY the import-graph check (fast, no jax "
+                         "tracing)")
+    ap.add_argument("--no-recompile", action="store_true",
+                    help="skip the runtime recompile_guard pass (trace-only "
+                         "analysis; faster)")
+    args = ap.parse_args(argv)
+
+    src_root = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    report: dict = {}
+    ok = True
+
+    if args.imports or args.imports_only:
+        imp = imports_mod.check_imports(src_root)
+        report["imports"] = imp
+        ok = ok and imp["ok"]
+        status = "OK" if imp["ok"] else "FAIL"
+        print(f"[analyze] imports: {imp['modules']} modules, "
+              f"{imp['edges']} edges — {status}")
+        for cyc in imp["cycles"]:
+            print(f"  FAIL import cycle: {' -> '.join(cyc)}")
+        for leaf, deps in imp["leaf_violations"].items():
+            print(f"  FAIL leaf module {leaf} imports: {', '.join(deps)}")
+
+    if not args.imports_only:
+        contracts_report = runner_mod.run(
+            with_recompile=not args.no_recompile)
+        report["contracts"] = contracts_report
+        ok = ok and contracts_report["ok"]
+        print(runner_mod.summarize(contracts_report))
+
+    if args.json == "-":
+        json.dump(report, sys.stdout, indent=2, sort_keys=True)
+        sys.stdout.write("\n")
+    elif args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"[analyze] report written to {args.json}")
+
+    if not ok:
+        raise SystemExit(1)
+
+
 def cmd_oneshot(argv) -> None:
     ap = argparse.ArgumentParser(prog="repro.launch.oms")
     _encoding_args(ap)
@@ -415,6 +479,8 @@ def main(argv=None):
         cmd_serve(argv[1:])
     elif argv and argv[0] == "queries":
         cmd_queries(argv[1:])
+    elif argv and argv[0] == "analyze":
+        cmd_analyze(argv[1:])
     else:
         cmd_oneshot(argv)
 

@@ -9,7 +9,6 @@ real launchers consume.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -109,7 +108,6 @@ def make_cell(arch: str, shape_name: str, *, mesh, n_microbatches: int = 4,
 
     da = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
     model_size = mesh.shape["model"]
-    data_size = int(np.prod([mesh.shape[a] for a in da]))
 
     is_train = shape.kind == "train"
     model = build_model(cfg, max_seq=shape.seq_len,

@@ -15,8 +15,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import reduced_for_smoke
 from repro.configs.registry import get_config

@@ -7,7 +7,6 @@ scan-over-layers and map 1:1 onto sharding rules (distributed/sharding.py).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ Caches mirror the per-type stacking: cache["attn"]["k"] has shape
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

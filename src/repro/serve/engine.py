@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.registry import contract, declare
 from repro.core.search import (SearchParams, SearchResult,
                                _search_sorted_padded, sort_pad_plan,
                                validate_search_params)
@@ -56,6 +57,19 @@ class StreamStats(NamedTuple):
     slab_rows: int     # rows per slab (the device-memory bound)
 
 
+# The slab step — the capped _search_sorted_padded call plus the offset/
+# merge fold below — is the streaming engine's entire device program. Its
+# contract is the engine's reason to exist: device bytes are determined by
+# the SLAB (q_block * slab_rows * W words of xor tensor at worst), never by
+# the library. `oms.py analyze` traces the step per search backend and
+# checks these (see repro.analysis.runner).
+@contract("serve:slab_step", "peak_intermediate", "no_host_transfer",
+          "dtype_stability",
+          bound=lambda c: (max(c["q_block"], 32)
+                           * c["slab_rows"] * c["n_words"] * 4),
+          note="slab-determined cap: worst backend per slab — vpu's "
+               "(Qb, slab_rows, W) xor tensor or mxu's 32-lane "
+               "(slab_rows, D) unpack; independent of library size")
 @jax.jit
 def _offset_rows(std_b, std_row, open_b, open_row, offset):
     """Map slab-local winner rows into the global padded row space."""
@@ -70,6 +84,15 @@ def _merge_partials(run, part, k: int):
     std_b, std_row = merge_topk(run[0], run[1], part[0], part[1], k)
     open_b, open_row = merge_topk(run[2], run[3], part[2], part[3], k)
     return std_b, std_row, open_b, open_row
+
+
+# The serve loop's runtime contract: repeated same-shaped search_encoded
+# calls must hit the jit caches (fixed slab shape + memoized padding plan =
+# stable abstract signatures). The analyzer runs real repeat calls under a
+# RecompileGuard; per-call cache growth here means every request pays an
+# XLA compile.
+declare("serve:loop", "recompile_guard",
+        note="steady-state serving must not re-trace/re-compile per call")
 
 
 class StreamingEngine:

@@ -11,7 +11,6 @@ applied before the (pod-axis) all-reduce when enabled.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

@@ -1,0 +1,101 @@
+"""Perf-trajectory gate (benchmarks/history.py): regression math + I/O.
+
+The committed BENCH_history/*.jsonl files are the baseline a CI run is
+gated against; these tests pin the gate's semantics — >25% slowdown vs
+the LAST committed row of the same name fails, micro-rows and first
+appearances are exempt, and a failing gate never appends (a regressed row
+must not bury the baseline it broke).
+"""
+import json
+
+import pytest
+
+from benchmarks.history import (append_rows, compare, load_history, load_run,
+                                main)
+
+
+def _row(name, us, derived="", rev="abc1234"):
+    return {"name": name, "us_per_call": us, "derived": derived,
+            "git_rev": rev, "timestamp": "2026-08-09T00:00:00+00:00"}
+
+
+class TestCompare:
+    def test_within_tolerance_passes(self):
+        base = {"x": _row("x", 1000.0)}
+        assert compare(base, [_row("x", 1249.0)]) == []
+
+    def test_over_25pct_regresses(self):
+        base = {"x": _row("x", 1000.0)}
+        msgs = compare(base, [_row("x", 1300.0)])
+        assert len(msgs) == 1
+        assert "x:" in msgs[0] and "1.30x" in msgs[0]
+
+    def test_first_appearance_is_exempt(self):
+        assert compare({}, [_row("new", 9999.0)]) == []
+
+    def test_micro_rows_are_exempt(self):
+        # 50us -> 500us is a 10x "regression" entirely inside timer noise;
+        # the min_us floor exempts it on either side.
+        base = {"x": _row("x", 50.0)}
+        assert compare(base, [_row("x", 500.0)], min_us=100.0) == []
+        assert compare({"y": _row("y", 5000.0)},
+                       [_row("y", 50.0)], min_us=100.0) == []
+
+    def test_error_sentinel_fails(self):
+        msgs = compare({}, [_row("x", 0.0, derived="ERROR")])
+        assert len(msgs) == 1 and "errored" in msgs[0]
+
+    def test_speedup_passes_and_custom_threshold(self):
+        base = {"x": _row("x", 1000.0)}
+        assert compare(base, [_row("x", 400.0)]) == []
+        assert compare(base, [_row("x", 1100.0)], max_regress=0.05)
+
+
+class TestHistoryIO:
+    def test_last_line_wins(self, tmp_path):
+        hist = tmp_path / "h.jsonl"
+        append_rows(str(hist), [_row("x", 100.0), _row("x", 200.0)])
+        assert load_history(str(hist))["x"]["us_per_call"] == 200.0
+
+    def test_missing_history_is_empty(self, tmp_path):
+        assert load_history(str(tmp_path / "nope.jsonl")) == {}
+
+    def test_run_must_be_a_list(self, tmp_path):
+        bad = tmp_path / "run.json"
+        bad.write_text("{}")
+        with pytest.raises(SystemExit):
+            load_run(str(bad))
+
+
+class TestMain:
+    def _write_run(self, path, rows):
+        path.write_text(json.dumps(rows) + "\n")
+
+    def test_append_then_check_roundtrip(self, tmp_path):
+        hist = tmp_path / "h.jsonl"
+        run = tmp_path / "run.json"
+        self._write_run(run, [_row("x", 1000.0)])
+        assert main(["append", str(hist), str(run)]) == 0
+        assert main(["check", str(hist), str(run)]) == 0
+
+    def test_regression_fails_without_appending(self, tmp_path):
+        hist = tmp_path / "h.jsonl"
+        run = tmp_path / "run.json"
+        self._write_run(run, [_row("x", 1000.0)])
+        assert main(["append", str(hist), str(run)]) == 0
+        n_lines = len(hist.read_text().splitlines())
+
+        self._write_run(run, [_row("x", 2000.0)])
+        assert main(["append", str(hist), str(run)]) == 1
+        assert len(hist.read_text().splitlines()) == n_lines
+
+    def test_committed_seed_gates_itself(self):
+        # The committed seeds must pass their own gate (identity check) —
+        # guards against malformed hand-edits to BENCH_history.
+        import os
+        root = os.path.join(os.path.dirname(__file__), "..")
+        for suite in ("encode", "stream"):
+            hist = os.path.join(root, "BENCH_history", f"{suite}.jsonl")
+            rows = list(load_history(hist).values())
+            assert rows, f"BENCH_history/{suite}.jsonl is empty"
+            assert compare(load_history(hist), rows) == []

@@ -1,10 +1,9 @@
 """Reference-DB blocking invariants (paper §II-B layout)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core.blocking import (PAD_PMZ, build_reference_db,
+from repro.core.blocking import (build_reference_db,
                                  candidate_block_stats, shard_reference_db)
 
 

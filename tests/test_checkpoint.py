@@ -1,8 +1,6 @@
 """Sharded checkpoint: round-trip, atomicity, async, corruption detection."""
 import os
-import shutil
 import tempfile
-import time
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -160,9 +159,10 @@ def test_zero1_opt_state_sharding_lowers():
         cell = make_cell("whisper-base", "train_4k", mesh=mesh,
                          n_microbatches=2)
         step = make_step_fn(cell, n_microbatches=2)
-        sh = lambda t: jax.tree_util.tree_map(
-            lambda s: NamedSharding(mesh, s), t,
-            is_leaf=lambda x: isinstance(x, PartitionSpec))
+        def sh(t):
+            return jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), t,
+                is_leaf=lambda x: isinstance(x, PartitionSpec))
         j = jax.jit(step, in_shardings=tuple(sh(s) for s in cell.in_specs),
                     donate_argnums=cell.donate)
         with mesh:

@@ -2,12 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import packing
-from repro.core.encoding import (Codebooks, PreprocessedSpectra,
-                                 encode_spectra, make_codebooks,
-                                 preprocess_spectra)
+from repro.core.encoding import (PreprocessedSpectra, encode_spectra,
+                                 make_codebooks, preprocess_spectra)
 
 DIM = 256
 

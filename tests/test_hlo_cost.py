@@ -1,7 +1,6 @@
 """Trip-count-weighted HLO cost analysis vs ground truth."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.utils import hlo_cost

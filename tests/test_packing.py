@@ -1,8 +1,6 @@
 """Unit + property tests for HV bit-packing and Hamming primitives."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import packing

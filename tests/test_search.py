@@ -1,5 +1,4 @@
 """Blocked dual-window search semantics."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st

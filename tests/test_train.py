@@ -1,5 +1,4 @@
 """Training substrate: microbatching, compression, loop fault tolerance."""
-import os
 import tempfile
 
 import jax
