@@ -70,10 +70,16 @@ def main() -> None:
         scanned_c = out.scanned_rows_total
         scanned_o = pipe.pure_open_scanned_rows(n_queries, qp_np, qc_np)
 
+        # Packed-HV bytes those comparison rows touch (the resident path
+        # has no store meter; a streamed run of the same plan reads exactly
+        # rows * W * 4 bytes at full width).
+        w4 = (dim // 32) * 4
         emit(f"cascade/{label}/pure_open", t_open * 1e6,
-             f"q_per_s={n_queries / t_open:.0f} scanned_rows={scanned_o}")
+             f"q_per_s={n_queries / t_open:.0f} scanned_rows={scanned_o} "
+             f"scanned_bytes={scanned_o * w4}")
         emit(f"cascade/{label}/cascade", t_casc * 1e6,
              f"q_per_s={n_queries / t_casc:.0f} scanned_rows={scanned_c} "
+             f"scanned_bytes={scanned_c * w4} "
              f"id_rate={id_rate:.2f} "
              f"rows_vs_open={scanned_c / max(scanned_o, 1):.2f}x")
 

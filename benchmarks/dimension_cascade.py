@@ -1,0 +1,137 @@
+"""Dimension-cascade pruning: prefix-word scan + exact full-width rescore.
+
+The FeNOMS-style dimension cascade scans every in-window candidate over only
+the first ``prefix_words`` packed words, then gathers and rescores the
+survivors at full width. With the exact lower-bound margin the accepted IDs
+are bit-identical to the full scan; the win is *scanned bytes*: the stage-A
+slab reads fetch ``prefix_words*4`` bytes per row instead of ``W*4``.
+
+Two query scenarios over the same reference store:
+
+  * ``clean``   — low-noise replicas, no planted modifications: real matches
+    score near ``dim``, the exact per-query thresholds bite, and most rows
+    are pruned after the prefix read (the regime the cascade targets);
+  * ``default`` — the synthetic default (noisy, 50% modified): thresholds
+    sit lower, more rows survive to the full-width rescore, and the byte
+    economy shrinks toward the prefix/full ratio's worst case.
+
+Both run on the **streaming engine** (the only path that meters real store
+reads) with ``top_k=1`` — the exact kth-similarity threshold for k >= 2 is
+the kth best in-window score, which on noisy workloads is close to noise
+level and prunes little; the cascade is a rank-1 accelerator (README).
+
+Acceptance asserted here:
+  * exact-mode results are bit-identical to the full-width scan at slab
+    sizes {1, prime, whole-store} (slab boundaries never change results);
+  * the clean scenario's scanned-bytes reduction is >= 2.0x.
+
+Env knobs (defaults ARE the CI smoke settings, so the committed
+``BENCH_history/dimension.jsonl`` rows gate structurally):
+  BENCH_DIMCASC_REFS=2048  BENCH_DIMCASC_QUERIES=64  BENCH_DIMCASC_DIM=1024
+  BENCH_DIMCASC_PREFIX=12  BENCH_DIMCASC_MAXR=128
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import OMSConfig, OMSPipeline
+from repro.data.spectra import LibraryConfig, make_dataset
+
+# Scenario -> query-noise overrides on LibraryConfig (refs are shared: they
+# depend only on n_refs/seed, so both scenarios search the same store).
+SCENARIOS = [
+    ("clean", dict(dropout=0.005, mz_jitter=0.001, intensity_jitter=0.03,
+                   modified_frac=0.0)),
+    ("default", dict()),
+]
+
+BENCH_SLAB = 512          # slab size for the timed/metered runs
+IDENTITY_SLABS = (1, 331, 1 << 30)   # unit, prime, whole-store
+
+
+def _result_arrays(out) -> tuple[np.ndarray, ...]:
+    return tuple(np.asarray(f) for f in out.result)
+
+
+def main() -> None:
+    n_refs = int(os.environ.get("BENCH_DIMCASC_REFS", 2048))
+    n_queries = int(os.environ.get("BENCH_DIMCASC_QUERIES", 64))
+    dim = int(os.environ.get("BENCH_DIMCASC_DIM", 1024))
+    prefix = int(os.environ.get("BENCH_DIMCASC_PREFIX", 12))
+    max_r = int(os.environ.get("BENCH_DIMCASC_MAXR", 128))
+
+    cfg = OMSConfig(dim=dim, n_levels=16, max_r=max_r, q_block=16, top_k=1,
+                    prefix_seed_da=0.25)
+    base = LibraryConfig(n_refs=n_refs, n_queries=n_queries, seed=0)
+
+    tmp = tempfile.mkdtemp(prefix="oms-dimcasc-bench-")
+    try:
+        path = f"{tmp}/store"
+        OMSPipeline.ingest(cfg, make_dataset(base).refs, path)
+
+        pipe = OMSPipeline.from_store(path, cfg, resident=False,
+                                      slab_rows=BENCH_SLAB)
+        for label, noise in SCENARIOS:
+            ds = make_dataset(dataclasses.replace(base, **noise))
+            hvs, qp, qc = pipe.encode_queries(ds.queries)
+
+            t_full = timeit(lambda: pipe.search_encoded(hvs, qp, qc))
+            s_full = pipe.engine.last_stats
+            full_rows, full_bytes = s_full.scanned_rows, s_full.scanned_bytes
+
+            t_pref = timeit(lambda: pipe.search_encoded(
+                hvs, qp, qc, prefix_words=prefix))
+            s_pref = pipe.engine.last_stats
+            pref_rows, pref_bytes = s_pref.scanned_rows, s_pref.scanned_bytes
+
+            reduction = full_bytes / max(pref_bytes, 1)
+            emit(f"dimension/{label}/full", t_full * 1e6,
+                 f"q_per_s={n_queries / t_full:.0f} "
+                 f"scanned_rows={full_rows} scanned_bytes={full_bytes}")
+            emit(f"dimension/{label}/prefix", t_pref * 1e6,
+                 f"q_per_s={n_queries / t_pref:.0f} "
+                 f"scanned_rows={pref_rows} scanned_bytes={pref_bytes} "
+                 f"reduction={reduction:.2f}x prefix_words={prefix}")
+
+            # The tentpole's byte-economy invariant: on the clean workload
+            # the prefix cascade must at least halve the streamed bytes.
+            if label == "clean" and reduction < 2.0:
+                raise AssertionError(
+                    f"clean-scenario scanned-bytes reduction {reduction:.2f}x "
+                    f"< 2.0x (full={full_bytes}, prefix={pref_bytes})")
+
+        # ---- exactness sweep (clean queries): the prefix cascade's merged
+        # results must be bit-identical to the full-width scan at every slab
+        # geometry — unit slabs, a prime slab size that misaligns every
+        # block boundary, and the degenerate whole-store slab.
+        ds = make_dataset(dataclasses.replace(base, **SCENARIOS[0][1]))
+        for slab_rows in IDENTITY_SLABS:
+            p = OMSPipeline.from_store(path, cfg, resident=False,
+                                       slab_rows=slab_rows)
+            hvs, qp, qc = p.encode_queries(ds.queries)
+            ref = _result_arrays(p.search_encoded(hvs, qp, qc))
+            got = _result_arrays(p.search_encoded(hvs, qp, qc,
+                                                  prefix_words=prefix))
+            for a, b in zip(ref, got):
+                if not np.array_equal(a, b):
+                    raise AssertionError(
+                        f"prefix results diverge from full-width at "
+                        f"slab_rows={slab_rows}")
+        emit("dimension/identity", 0.0,
+             f"exact prefix == full at slab_rows="
+             f"{','.join(str(s) for s in IDENTITY_SLABS)}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    import benchmarks.common as common
+
+    common.header()
+    main()

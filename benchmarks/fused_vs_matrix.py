@@ -14,8 +14,13 @@ Pallas kernels is not representative of TPU; the memory story is exact).
 The jaxpr traversal is :mod:`repro.analysis.jaxpr_walk` — the SAME walker
 the contract analyzer (`oms.py analyze`) trusts, so benchmark claims and
 machine-checked contracts can never drift apart.
+
+Env overrides (CI smoke): ``BENCH_FUSEDVM_REFS``, ``BENCH_FUSEDVM_QUERIES``,
+``BENCH_FUSEDVM_DIM``, ``BENCH_FUSEDVM_MAXR``.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -35,10 +40,19 @@ def materialises_score_matrix(closed_jaxpr, qb: int, rk: int) -> bool:
 
 
 def main():
-    cfg = OMSConfig(dim=2048, max_r=1024, q_block=16, n_levels=16)
-    ds = make_dataset(LibraryConfig(n_refs=8192, n_queries=64, seed=7))
+    cfg = OMSConfig(dim=int(os.environ.get("BENCH_FUSEDVM_DIM", 2048)),
+                    max_r=int(os.environ.get("BENCH_FUSEDVM_MAXR", 1024)),
+                    q_block=16, n_levels=16)
+    ds = make_dataset(LibraryConfig(
+        n_refs=int(os.environ.get("BENCH_FUSEDVM_REFS", 8192)),
+        n_queries=int(os.environ.get("BENCH_FUSEDVM_QUERIES", 64)), seed=7))
     pipe = OMSPipeline(cfg, ds.refs)
     hvs, qp, qc = pipe.encode_queries(ds.queries)
+    if cfg.dim // 32 == cfg.q_block:
+        # the shape detector can't tell a (Qb, Rk) score matrix from the
+        # transposed (Rk, W) reference slice when W == Qb
+        raise SystemExit("ambiguous shapes: n_words == q_block — pick a "
+                         "different BENCH_FUSEDVM_DIM")
     base = pipe.search_params(qp, qc)
     rk = base.k_blocks * cfg.max_r
     sims_bytes = cfg.q_block * rk * 4  # the (Qb, Rk) int32 score matrix

@@ -18,13 +18,39 @@ committed row of the same name by more than ``--max-regress`` (default
 0.25, i.e. >25%). Rows under ``--min-us`` (default 100us) on either side
 are exempt — micro-rows are timer noise, not signal — as are ERROR
 sentinels (0.0) and names with no committed baseline (first appearance).
+
+Structural columns gate separately at **0% tolerance**: ``key=value``
+tokens in ``derived`` whose key is in :data:`STRUCTURAL_KEYS` (peak device
+bytes, scanned rows/bytes, store sizes) are functions of shapes and
+deterministic workload settings, not of wall clock, so ANY drift is a real
+change in the memory/transfer story. The structural gate ignores
+``--min-us`` (a micro-row's footprint is still exact) and only fires for
+keys present on both sides — new keys become baseline on first append.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import re
 import sys
+
+# Keys in `derived` whose values are structural (shape/workload-determined,
+# wall-clock-independent). Timing-derived tokens (q_per_s, sp/s, reduction
+# ratios, id rates) are deliberately absent.
+STRUCTURAL_KEYS = frozenset((
+    "device_peak", "slab_cap", "scanned_rows", "scanned_bytes",
+    "max_intermediate", "store", "raw"))
+
+_TOKEN = re.compile(r"(\w+)=([0-9][0-9.]*)")
+
+
+def structural_columns(derived: str) -> dict[str, str]:
+    """Allowlisted ``key=value`` tokens of a row's ``derived`` string.
+    Values stay as the emitted text — the gate is exact equality, not
+    float closeness."""
+    return {k: v for k, v in _TOKEN.findall(derived or "")
+            if k in STRUCTURAL_KEYS}
 
 
 def load_history(path: str) -> dict[str, dict]:
@@ -61,6 +87,15 @@ def compare(baseline: dict[str, dict], rows: list[dict], *,
         base = baseline.get(name)
         if base is None:
             continue                      # first appearance: becomes baseline
+        # Structural columns: exact equality, no timing exemptions.
+        base_cols = structural_columns(str(base.get("derived", "")))
+        cols = structural_columns(str(row.get("derived", "")))
+        for key in sorted(base_cols.keys() & cols.keys()):
+            if cols[key] != base_cols[key]:
+                problems.append(
+                    f"{name}: structural {key}={cols[key]} vs committed "
+                    f"{key}={base_cols[key]} (0% tolerance, baseline "
+                    f"{base.get('git_rev', '?')})")
         base_us = float(base["us_per_call"])
         if us <= min_us or base_us <= min_us:
             continue                      # micro-rows are timer noise

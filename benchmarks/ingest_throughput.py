@@ -13,9 +13,13 @@ the repro's LibraryStore at two library scales:
 
 and the bytes each path moves: raw peak arrays into the encoder vs packed
 shard bytes off the store (the near-storage stream).
+
+Env overrides (CI smoke): ``BENCH_INGEST_SCALES`` (csv),
+``BENCH_INGEST_DIM``, ``BENCH_INGEST_MAXR``.
 """
 from __future__ import annotations
 
+import os
 import shutil
 import tempfile
 import time
@@ -26,7 +30,8 @@ from benchmarks.common import emit
 from repro.core import OMSConfig, OMSPipeline
 from repro.data.spectra import LibraryConfig, make_dataset
 
-SCALES = (2048, 8192)
+SCALES = tuple(int(s) for s in os.environ.get(
+    "BENCH_INGEST_SCALES", "2048,8192").split(","))
 
 
 def _once(fn):
@@ -37,7 +42,9 @@ def _once(fn):
 
 
 def main() -> None:
-    cfg = OMSConfig(dim=2048, max_r=512, q_block=16)
+    cfg = OMSConfig(dim=int(os.environ.get("BENCH_INGEST_DIM", 2048)),
+                    max_r=int(os.environ.get("BENCH_INGEST_MAXR", 512)),
+                    q_block=16)
     for n_refs in SCALES:
         ds = make_dataset(LibraryConfig(n_refs=n_refs, n_queries=16))
         raw_bytes = sum(x.size * x.dtype.itemsize

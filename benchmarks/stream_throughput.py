@@ -115,7 +115,9 @@ def main() -> None:
                      f"{n_queries / dt:.0f} sp/s "
                      f"device_peak={peak / 2**20:.2f}MiB "
                      f"(slab_cap={cap / 2**20:.2f}MiB) "
-                     f"scanned={s.n_scanned}/{s.n_slabs} slabs")
+                     f"scanned={s.n_scanned}/{s.n_slabs} slabs "
+                     f"scanned_rows={s.scanned_rows} "
+                     f"scanned_bytes={s.scanned_bytes}")
         finally:
             shutil.rmtree(tmp, ignore_errors=True)
 

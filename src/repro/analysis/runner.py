@@ -183,6 +183,71 @@ def _search_results(fx: _Fixture) -> dict[tuple, list[C.ContractResult]]:
     return out
 
 
+_PREFIX_WORDS = 4    # distinct from n_words (16), word_tile (8), q_block (8)
+_RESCORE_ROWS = 64   # the smallest survivor bucket (core.search.row_bucket)
+
+
+def _prefix_results(fx: _Fixture) -> dict[str, dict[str, list]]:
+    """Trace the dimension cascade's two stages per search backend.
+
+    Stage A (``_prefix_flags``) is traced against both the resident DB's
+    prefix-column view and a prefix slab (k_blocks capped, slab shapes);
+    stage B (``_rescore_rows_padded``) once per backend at the smallest
+    survivor bucket. Keys: backend -> path -> results.
+    """
+    from repro.core import backends
+    from repro.core import search as search_mod
+    from repro.serve.slabs import slab_arrays
+
+    sm = fx.sm
+    P = _PREFIX_WORDS
+    base = fx.resident.search_params(fx.qp_np, fx.qc_np)
+    qh, qp, qc = fx.padded_queries()
+    Qp = int(qp.shape[0])
+    nqb = Qp // sm.q_block
+    thr = np.zeros((Qp,), np.int32)
+    eng = fx.streamed.engine
+    slab = slab_arrays(eng.layout, 0, eng.plan, n_words=P)
+    slab_cap = eng.plan.slab_blocks
+    db_p = dataclasses.replace(fx.resident.db,
+                               hvs=fx.resident.db.hvs[:, :P])
+
+    S = _RESCORE_ROWS
+    r_hvs = np.zeros((S, sm.n_words), np.uint32)
+    r_rows = np.arange(S, dtype=np.int32)
+    r_pmz = np.zeros((S,), np.float32)
+    r_charge = np.zeros((S,), np.int32)
+
+    out: dict[str, dict[str, list]] = {}
+    for be in backends.names():
+        pr = base._replace(backend=be, prefix_words=P)
+        per_path: dict[str, list] = {}
+        for path, db, p in (
+                ("resident", db_p, pr),
+                ("streamed", slab,
+                 pr._replace(k_blocks=min(pr.k_blocks, slab_cap)))):
+            rk = p.k_blocks * sm.max_r
+            jaxpr = jax.make_jaxpr(
+                lambda d, a, b, c, t1, t2, _p=p: search_mod._prefix_flags(
+                    d, a, b, c, t1, t2, params=_p, dim=sm.dim))(
+                db, qh[:, :P], qp, qc, thr, thr)
+            ctx = {"dim": sm.dim, "n_words": P, "q_block": sm.q_block,
+                   "rk": rk, "top_k": sm.top_k, "nqb": nqb,
+                   "n_rows": int(db.pmz.shape[0])}
+            per_path[path] = _eval_decls(f"prefix:{be}", jaxpr, ctx)
+
+        jaxpr_r = jax.make_jaxpr(
+            lambda *a, _p=pr: search_mod._rescore_rows_padded(
+                *a, params=_p, dim=sm.dim))(
+            r_hvs, r_rows, r_pmz, r_charge, qh, qp, qc)
+        ctx_r = {"dim": sm.dim, "n_words": sm.n_words,
+                 "q_block": sm.q_block, "rk": S, "top_k": sm.top_k,
+                 "nqb": nqb, "n_rows": int(fx.resident.db.pmz.shape[0])}
+        resc = _eval_decls(f"rescore:{be}", jaxpr_r, ctx_r)
+        out[be] = {path: res + resc for path, res in per_path.items()}
+    return out
+
+
 def _merge_step_results(fx: _Fixture) -> list[C.ContractResult]:
     """The streamed path's cross-slab fold (offset + merge_topk) is part of
     the slab step's device program — same contracts, tiny trace."""
@@ -213,6 +278,8 @@ def _recompile_results(fx: _Fixture) -> dict[str, list[C.ContractResult]]:
     hvs, qp, qc = fx.q
     tracked = [
         ("search._search_sorted_padded", search_mod._search_sorted_padded),
+        ("search._prefix_flags", search_mod._prefix_flags),
+        ("search._rescore_rows_padded", search_mod._rescore_rows_padded),
         ("engine._offset_rows", engine_mod._offset_rows),
         ("engine._merge_partials", engine_mod._merge_partials),
         ("encode._preprocess_jit", encode_backends._preprocess_jit),
@@ -224,9 +291,16 @@ def _recompile_results(fx: _Fixture) -> dict[str, list[C.ContractResult]]:
         for path, pipe in (("resident", fx.resident),
                            ("streamed", fx.streamed)):
             guard = C.RecompileGuard(tracked)
-            pipe.search_encoded(hvs, qp, qc, backend=be)     # warmup/compile
+            # warmup/compile: the plain scan AND the dimension cascade (its
+            # survivor buckets are deterministic for same-shaped batches, so
+            # steady-state repeats must hit the same jit cache entries)
+            pipe.search_encoded(hvs, qp, qc, backend=be)
+            pipe.search_encoded(hvs, qp, qc, backend=be,
+                                prefix_words=_PREFIX_WORDS)
             guard.arm()
             pipe.search_encoded(hvs, qp, qc, backend=be)     # steady state
+            pipe.search_encoded(hvs, qp, qc, backend=be,
+                                prefix_words=_PREFIX_WORDS)
             results.append(guard.check(target=f"serve:loop[{path}:{be}]"))
         out[be] = results
     return out
@@ -245,6 +319,7 @@ def run(sm: SmokeShapes | None = None, *,
     try:
         enc = _encode_results(fx)
         srch = _search_results(fx)
+        pref = _prefix_results(fx)
         merge_res = _merge_step_results(fx)
         reco = _recompile_results(fx) if with_recompile else {}
     finally:
@@ -262,10 +337,19 @@ def run(sm: SmokeShapes | None = None, *,
                             if f"[{path}:" in r.target]
             combos.append({
                 "encode": e, "search": be, "path": path,
-                "cascade": cascade,
+                "cascade": cascade, "prefix": False,
                 "contracts": [r.as_dict() for r in results],
                 "passed": all(r.passed for r in results),
             })
+        for be in sorted(pref):
+            for path in ("resident", "streamed"):
+                results = list(enc[e]) + list(pref[be][path])
+                combos.append({
+                    "encode": e, "search": be, "path": path,
+                    "cascade": False, "prefix": True,
+                    "contracts": [r.as_dict() for r in results],
+                    "passed": all(r.passed for r in results),
+                })
 
     n_checks = sum(len(c["contracts"]) for c in combos)
     failed = [c for c in combos if not c["passed"]]

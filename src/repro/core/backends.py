@@ -112,6 +112,22 @@ register("fused", FUSED, _fused_pallas)
 register("fused_xla", FUSED, _fused_xla)
 
 
+def hamming_tile_fn(name: str) -> Callable:
+    """Plain ``(q_hvs, r_hvs, dim) -> (Qb, Rk) hamming`` tile for ``name``.
+
+    The dimension cascade's prefix scan and survivor rescore need a raw
+    Hamming tile at arbitrary word widths. Matrix backends already have that
+    signature; fused backends have no tile entry point (the whole point is
+    not materialising one), so they fall back to the packed-VPU tile for
+    these two stages — the fused single-pass kernel still runs the main
+    full-width scan when the cascade is off.
+    """
+    be = get(name)
+    if be.kind == MATRIX:
+        return be.fn
+    return _REGISTRY["vpu"].fn
+
+
 # ---------------------------------------------------------------------------
 # Contracts — the memory/transfer/dtype story of each backend, declared next
 # to its registration and machine-checked by `oms.py analyze` (the runner
@@ -182,6 +198,56 @@ _declare("search:fused", "peak_intermediate",
 _declare("search:fused_xla", "peak_intermediate",
          bound=lambda c: c["q_block"] * c["rk"] * c["n_words"] * 4,
          note="XLA fallback materialises the xor tensor like vpu")
+
+# Dimension-cascade stages. ``prefix:<be>`` is one stage-A survivor-flag
+# scan (ctx n_words = prefix_words, nqb query blocks, n_rows padded DB rows
+# — the scatter target and the (nqb, rk) flag/index carriers are the extra
+# non-tile intermediates); ``rescore:<be>`` is one stage-B exact rescore
+# over an rk = survivor-bucket candidate set at full width. Fused backends
+# route both stages through the packed-VPU tile (see ``hamming_tile_fn``),
+# so their bounds are the VPU bounds.
+
+
+def _prefix_extra(c):
+    return max(c["nqb"] * c["rk"] * 4, c["n_rows"] * 4)
+
+
+def _prefix_vpu_bound(c):
+    return max(c["q_block"] * c["rk"] * c["n_words"] * 4, _prefix_extra(c))
+
+
+def _prefix_mxu_bound(c):
+    return max(c["rk"] * 32 * c["n_words"] * 4, _prefix_extra(c))
+
+
+def _prefix_kernel_vpu_bound(c):
+    return max(_kernel_vpu_bound(c), _prefix_extra(c))
+
+
+def _prefix_kernel_mxu_bound(c):
+    return max(_kernel_mxu_bound(c), _prefix_extra(c))
+
+
+for _t, _b, _n in (
+    ("prefix:vpu", _prefix_vpu_bound, "packed XOR tensor (Qb, Rk, P)"),
+    ("prefix:mxu", _prefix_mxu_bound, "bits_to_pm1 unpack (Rk, 32P) int32"),
+    ("prefix:kernel_vpu", _prefix_kernel_vpu_bound,
+     "tile-padded Pallas output / padded (Rk', P) copy"),
+    ("prefix:kernel_mxu", _prefix_kernel_mxu_bound,
+     "tile-padded Pallas MXU output / padded (Rk', P) copy"),
+    ("prefix:fused", _prefix_vpu_bound, "packed-VPU tile fallback"),
+    ("prefix:fused_xla", _prefix_vpu_bound, "packed-VPU tile fallback"),
+    ("rescore:vpu", _prefix_vpu_bound, "packed XOR tensor (Qb, S, W)"),
+    ("rescore:mxu", _prefix_mxu_bound, "bits_to_pm1 unpack (S, D) int32"),
+    ("rescore:kernel_vpu", _prefix_kernel_vpu_bound,
+     "tile-padded Pallas output / padded (S', W) copy"),
+    ("rescore:kernel_mxu", _prefix_kernel_mxu_bound,
+     "tile-padded Pallas MXU output / padded (S', W) copy"),
+    ("rescore:fused", _prefix_vpu_bound, "packed-VPU tile fallback"),
+    ("rescore:fused_xla", _prefix_vpu_bound, "packed-VPU tile fallback"),
+):
+    _declare_common(_t)
+    _declare(_t, "peak_intermediate", bound=_b, note=_n)
 
 # The paper's single-pass kernel never materialises the (Qb, Rk) score
 # matrix; matrix-kind backends compute exactly that tile BY DESIGN, so the

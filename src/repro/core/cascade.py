@@ -74,6 +74,15 @@ class CascadeOutput(NamedTuple):
                    if s is not None)
 
     @property
+    def scanned_bytes_total(self) -> int | None:
+        """Measured packed-HV bytes streamed across both stages, or None on
+        the resident path (only the serve engine meters real store reads)."""
+        stages = [s for s in (self.stage1, self.stage2) if s is not None]
+        if not stages or any(s.stream_stats is None for s in stages):
+            return None
+        return sum(s.stream_stats.scanned_bytes for s in stages)
+
+    @property
     def fallthrough(self) -> np.ndarray:
         """(Q,) bool — queries that paid for the open scan."""
         return ~self.identified_stage1

@@ -66,6 +66,13 @@ class OMSConfig:
     add_decoys: bool = True
     backend: str = "vpu"         # any name in repro.core.backends.names()
     top_k: int = 1               # ranked winners per query and window
+    # Dimension cascade (FeNOMS direction): scan candidates over only the
+    # first prefix_words packed words, rescore survivors at full width.
+    # prefix_margin=-1 keeps the exact bound (bit-identical results);
+    # prefix_seed_da is the seed pass's precursor window. See core.search.
+    prefix_words: int = 0
+    prefix_margin: int = -1
+    prefix_seed_da: float = 1.0
     # Encoder hot path: any name in repro.core.encode_backends.names().
     # All encode backends are bit-identical; the knob only picks the
     # schedule (and its peak intermediate footprint / throughput).
@@ -288,20 +295,23 @@ class OMSPipeline:
         return self.db if self.db is not None else self.engine.layout
 
     @property
-    def _host_sidecars(self) -> tuple[np.ndarray, np.ndarray]:
-        """(pmz, is_decoy) row sidecars as host numpy, fetched once — the
-        resident DB holds them on device and the cascade's FDR grouping
-        must not pay a library-sized D2H copy per call."""
+    def _host_sidecars(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(pmz, charge, is_decoy) row sidecars as host numpy, fetched once —
+        the resident DB holds them on device and neither the cascade's FDR
+        grouping nor the dimension cascade's seed planning should pay a
+        library-sized D2H copy per call."""
         cached = getattr(self, "_host_sidecars_cache", None)
         if cached is None:
             meta = self._block_meta
-            cached = (np.asarray(meta.pmz), np.asarray(meta.is_decoy))
+            cached = (np.asarray(meta.pmz), np.asarray(meta.charge),
+                      np.asarray(meta.is_decoy))
             self._host_sidecars_cache = cached
         return cached
 
     def search_params(self, q_pmz, q_charge, *, exhaustive=False,
-                      open_tol_da=None, backend=None,
-                      top_k=None) -> SearchParams:
+                      open_tol_da=None, backend=None, top_k=None,
+                      prefix_words=None, prefix_margin=None,
+                      prefix_seed_da=None) -> SearchParams:
         tol = self.cfg.open_tol_da if open_tol_da is None else open_tol_da
         k = plan_search(self._block_meta, np.asarray(q_pmz),
                         np.asarray(q_charge),
@@ -310,13 +320,21 @@ class OMSPipeline:
             ppm_tol=self.cfg.ppm_tol, open_tol_da=tol,
             q_block=self.cfg.q_block, k_blocks=k,
             backend=backend or self.cfg.backend, exhaustive=exhaustive,
-            top_k=self.cfg.top_k if top_k is None else top_k)
+            top_k=self.cfg.top_k if top_k is None else top_k,
+            prefix_words=(self.cfg.prefix_words if prefix_words is None
+                          else prefix_words),
+            prefix_margin=(self.cfg.prefix_margin if prefix_margin is None
+                           else prefix_margin),
+            prefix_seed_da=(self.cfg.prefix_seed_da if prefix_seed_da is None
+                            else prefix_seed_da))
 
     def search_encoded(self, hvs: jax.Array, q_pmz: jax.Array,
                        q_charge: jax.Array, *, exhaustive: bool = False,
                        open_tol_da: float | None = None,
                        backend: str | None = None,
-                       top_k: int | None = None) -> OMSOutput:
+                       top_k: int | None = None,
+                       prefix_words: int | None = None,
+                       prefix_margin: int | None = None) -> OMSOutput:
         """Search already-encoded query HVs (callers that hold the encoded
         batch — the serving launcher, rescoring loops — avoid re-encoding)."""
         # One host conversion, shared by plan_search and the padding plan —
@@ -325,7 +343,8 @@ class OMSPipeline:
         qc_np = np.asarray(q_charge)
         params = self.search_params(qp_np, qc_np, exhaustive=exhaustive,
                                     open_tol_da=open_tol_da, backend=backend,
-                                    top_k=top_k)
+                                    top_k=top_k, prefix_words=prefix_words,
+                                    prefix_margin=prefix_margin)
         if self.engine is not None:
             result = self.engine.search_encoded(
                 hvs, q_pmz, q_charge, params, dim=self.cfg.dim,
@@ -341,9 +360,13 @@ class OMSPipeline:
                                   jnp.asarray(isd), jnp.asarray(valid),
                                   threshold=self.cfg.fdr_threshold)
         else:
+            row_meta = {}
+            if params.prefix_words:
+                row_pmz, row_charge, _ = self._host_sidecars
+                row_meta = dict(row_pmz_np=row_pmz, row_charge_np=row_charge)
             result = oms_search(self.db, hvs, q_pmz, q_charge, params,
                                 dim=self.cfg.dim, q_pmz_np=qp_np,
-                                q_charge_np=qc_np)
+                                q_charge_np=qc_np, **row_meta)
 
             def _fdr(row, sim):
                 valid = row >= 0
@@ -367,7 +390,9 @@ class OMSPipeline:
                                run_stage1: bool = True,
                                exhaustive: bool = False,
                                backend: str | None = None,
-                               top_k: int | None = None) -> CascadeOutput:
+                               top_k: int | None = None,
+                               prefix_words: int | None = None,
+                               prefix_margin: int | None = None) -> CascadeOutput:
         """Two-stage cascade over an encoded query batch: a narrow-window
         pass identifies unmodified spectra at the configured FDR, and only
         the fall-through queries pay for the full open scan. Works on both
@@ -377,6 +402,12 @@ class OMSPipeline:
         With ``run_stage1=False`` the output is bit-identical to
         :meth:`search_encoded`'s pure open search — the cascade's stage 2
         simply runs on every query.
+
+        ``prefix_words`` composes the dimension cascade into the open stage
+        (stage 2) — the 2x2 of (mass window x dimension) stages. The narrow
+        stage always scans full-width: its window is already only a handful
+        of blocks, so a prefix pass there would add a seed round-trip for
+        near-zero byte savings.
         """
         qp_np = np.asarray(q_pmz)
         qc_np = np.asarray(q_charge)
@@ -398,7 +429,9 @@ class OMSPipeline:
                                               narrow_tol_da=narrow_tol_da)
             else:
                 params = self.search_params(qp_s, qc_s, exhaustive=exhaustive,
-                                            backend=backend, top_k=k)
+                                            backend=backend, top_k=k,
+                                            prefix_words=prefix_words,
+                                            prefix_margin=prefix_margin)
             sel_j = jnp.asarray(sel)
             hv_s, qp_d, qc_d = hvs[sel_j], q_pmz[sel_j], q_charge[sel_j]
             if self.engine is not None:
@@ -407,9 +440,14 @@ class OMSPipeline:
                     q_pmz_np=qp_s, q_charge_np=qc_s)
                 stats = self.engine.last_stats
             else:
+                row_meta = {}
+                if params.prefix_words:
+                    row_pmz, row_charge, _ = self._host_sidecars
+                    row_meta = dict(row_pmz_np=row_pmz,
+                                    row_charge_np=row_charge)
                 res = oms_search(self.db, hv_s, qp_d, qc_d, params,
                                  dim=self.cfg.dim, q_pmz_np=qp_s,
-                                 q_charge_np=qc_s)
+                                 q_charge_np=qc_s, **row_meta)
                 stats = None
             return res, scanned_rows(meta, len(sel), params), stats
 
@@ -420,7 +458,7 @@ class OMSPipeline:
         cparams = CascadeParams(narrow_tol_da=narrow_tol_da,
                                 fdr_threshold=self.cfg.fdr_threshold,
                                 run_stage1=run_stage1)
-        row_pmz, row_isd = self._host_sidecars
+        row_pmz, _, row_isd = self._host_sidecars
         return cascade_search(
             run_stage, qp_np, top_k=k, row_pmz=row_pmz, row_is_decoy=row_isd,
             n_rows=meta.n_rows, params=cparams)
@@ -447,12 +485,15 @@ class OMSPipeline:
     def search(self, queries: SpectraSet, *, exhaustive: bool = False,
                open_tol_da: float | None = None,
                backend: str | None = None,
-               top_k: int | None = None) -> OMSOutput:
+               top_k: int | None = None,
+               prefix_words: int | None = None,
+               prefix_margin: int | None = None) -> OMSOutput:
         hvs, q_pmz, q_charge = self.encode_queries(queries)
         return self.search_encoded(hvs, q_pmz, q_charge,
                                    exhaustive=exhaustive,
                                    open_tol_da=open_tol_da, backend=backend,
-                                   top_k=top_k)
+                                   top_k=top_k, prefix_words=prefix_words,
+                                   prefix_margin=prefix_margin)
 
     # convenience for quality benchmarks -------------------------------
     def identifications(self, out: OMSOutput) -> int:

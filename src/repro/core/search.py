@@ -68,6 +68,12 @@ class SearchParams(NamedTuple):
     backend: str = "vpu"           # any name in repro.core.backends.names()
     exhaustive: bool = False       # True = HyperOMS-style full scan (baseline)
     top_k: int = 1                 # ranked winners kept per query and window
+    # -- dimension cascade (FeNOMS-style prefix-word pruning) ---------------
+    prefix_words: int = 0          # stage-A packed words (0 = full-width scan)
+    prefix_margin: int = -1        # survivor slack in bits; -1 = exact bound
+    #                                (dim - 32*prefix_words: bit-identical)
+    prefix_seed_da: float = 1.0    # seed-pass precursor window (Da) that
+    #                                bootstraps per-query thresholds
 
 
 class SearchResult(NamedTuple):
@@ -138,6 +144,29 @@ def _block_body(db: ReferenceDB, dim: int, p: SearchParams,
     return std_b, std_row, open_b, open_row
 
 
+def _block_keys(db: ReferenceDB):
+    """Monotonic block sort keys (block_max is per-charge ascending; adding a
+    large per-charge offset makes the concatenation globally ascending)."""
+    return jnp.where(
+        jnp.isfinite(db.block_max),
+        jnp.clip(db.block_max, 0.0, _CHARGE_KEY - 1.0) + db.block_charge * _CHARGE_KEY,
+        db.block_charge * _CHARGE_KEY + (_CHARGE_KEY - 1.0),
+    )
+
+
+def _qblock_start_row(db: ReferenceDB, p: SearchParams, bkey, qp, qc):
+    """First scanned row for one query block (searchsorted start pruning)."""
+    if p.exhaustive:
+        return jnp.int32(0)
+    # Lowest key any query in this block can match: pmz - open_tol.
+    lo = jnp.min(jnp.clip(qp - p.open_tol_da, 0.0, _CHARGE_KEY - 1.0)
+                 + qc * _CHARGE_KEY)
+    start_blk = jnp.searchsorted(bkey, lo)
+    # one-block guard against key rounding at block boundaries
+    start_blk = jnp.clip(start_blk - 1, 0, max(db.n_blocks - p.k_blocks, 0))
+    return (start_blk * db.max_r).astype(jnp.int32)
+
+
 @partial(jax.jit, static_argnames=("params", "dim"))
 def _search_sorted_padded(db: ReferenceDB, q_hvs, q_pmz, q_charge,
                           *, params: SearchParams, dim: int):
@@ -150,27 +179,11 @@ def _search_sorted_padded(db: ReferenceDB, q_hvs, q_pmz, q_charge,
         raise ValueError(f"top_k must be >= 1, got {p.top_k}")
     QB = p.q_block
     nqb = q_hvs.shape[0] // QB
-
-    # Monotonic block sort keys (block_max is per-charge ascending; adding a
-    # large per-charge offset makes the concatenation globally ascending).
-    bkey = jnp.where(
-        jnp.isfinite(db.block_max),
-        jnp.clip(db.block_max, 0.0, _CHARGE_KEY - 1.0) + db.block_charge * _CHARGE_KEY,
-        db.block_charge * _CHARGE_KEY + (_CHARGE_KEY - 1.0),
-    )
+    bkey = _block_keys(db)
 
     def one_qblock(args):
         qh, qp, qc = args
-        if p.exhaustive:
-            start_row = jnp.int32(0)
-        else:
-            # Lowest key any query in this block can match: pmz - open_tol.
-            lo = jnp.min(jnp.clip(qp - p.open_tol_da, 0.0, _CHARGE_KEY - 1.0)
-                         + qc * _CHARGE_KEY)
-            start_blk = jnp.searchsorted(bkey, lo)
-            # one-block guard against key rounding at block boundaries
-            start_blk = jnp.clip(start_blk - 1, 0, max(db.n_blocks - p.k_blocks, 0))
-            start_row = (start_blk * db.max_r).astype(jnp.int32)
+        start_row = _qblock_start_row(db, p, bkey, qp, qc)
         return _block_body(db, dim, p, qh, qp, qc, start_row)
 
     qs = (q_hvs.reshape(nqb, QB, -1), q_pmz.reshape(nqb, QB), q_charge.reshape(nqb, QB))
@@ -181,8 +194,234 @@ def _search_sorted_padded(db: ReferenceDB, q_hvs, q_pmz, q_charge,
 
 
 # ---------------------------------------------------------------------------
-# Host-side query padding plan (memoized)
+# Dimension cascade (FeNOMS direction): prefix-word prune + full rescore
 # ---------------------------------------------------------------------------
+#
+# Stage A scans every in-window candidate over only the first
+# ``prefix_words`` (P) packed words: ``ham_p`` mismatches over 32*P bits.
+# The remaining ``rest = dim - 32*P`` bits can add at most ``rest``
+# mismatches, so the candidate's FULL similarity is bounded by
+#
+#     ub = (32*P - ham_p) + rest = dim - ham_p >= full_sim.
+#
+# A candidate row survives iff ``ub >= T`` for a per-(query, window)
+# threshold T. In EXACT mode T is the k-th best full-width similarity over
+# any SUBSET of that query's in-window candidates (the seed pass below, then
+# tightened by the running winners): subset k-th <= true k-th, so every true
+# top-k row has full_sim >= T, hence ub >= T — no true winner is ever
+# pruned, and ties survive too (>=). Stage B gathers ONLY survivors at full
+# width and rescores them with the standard masked top-k selection, which
+# makes the final result bit-identical to the full-width scan.
+#
+# ``prefix_margin >= 0`` replaces the exact slack with a caller-chosen one:
+# survive iff prefix_sim + margin >= T. margin == rest is the exact bound;
+# smaller margins prune harder but may drop true winners (inexact, fast).
+
+_NEG_THRESHOLD = -(1 << 30)     # "no threshold yet": everything in-window survives
+
+
+def prefix_margin_bits(params: SearchParams, dim: int) -> int:
+    """Effective stage-A slack in bits (the exact bound unless overridden)."""
+    rest = dim - 32 * params.prefix_words
+    if params.prefix_margin < 0:
+        return rest
+    return min(params.prefix_margin, rest)
+
+
+@partial(jax.jit, static_argnames=("params", "dim"))
+def _prefix_flags(db: ReferenceDB, q_hvs_p, q_pmz, q_charge, thr_std,
+                  thr_open, *, params: SearchParams, dim: int):
+    """Stage A: per-row survivor flags from a prefix-words Hamming scan.
+
+    ``db.hvs`` carries ONLY ``params.prefix_words`` packed words (a prefix
+    slab or a column-sliced resident view); pmz/charge/block sidecars are
+    the usual full ones. ``thr_std``/``thr_open`` are per padded-query int32
+    full-similarity thresholds (``_NEG_THRESHOLD`` where unknown). Returns
+    (n_rows,) bool — the OR over queries of the bound-based keep decision.
+    """
+    p = params
+    P = p.prefix_words
+    pdim = 32 * P
+    margin = prefix_margin_bits(p, dim)
+    QB = p.q_block
+    nqb = q_hvs_p.shape[0] // QB
+    rk = (p.k_blocks if not p.exhaustive else db.n_blocks) * db.max_r
+    tile = backends_mod.hamming_tile_fn(p.backend)
+    bkey = _block_keys(db)
+
+    def one_qblock(args):
+        qh, qp, qc, ts, to = args
+        start_row = _qblock_start_row(db, p, bkey, qp, qc)
+        r_hvs = jax.lax.dynamic_slice(db.hvs, (start_row, 0), (rk, P))
+        r_pmz = jax.lax.dynamic_slice(db.pmz, (start_row,), (rk,))
+        r_charge = jax.lax.dynamic_slice(db.charge, (start_row,), (rk,))
+        ham_p = tile(qh, r_hvs, pdim)                      # (QB, rk)
+        ub = (pdim - ham_p) + margin                       # best-case full sim
+        valid = (r_pmz[None, :] < PAD_PMZ) & (qc[:, None] == r_charge[None, :])
+        dpmz = jnp.abs(qp[:, None] - r_pmz[None, :])
+        std_m = valid & (dpmz <= qp[:, None] * (p.ppm_tol * 1e-6))
+        open_m = valid & (dpmz <= p.open_tol_da)
+        keep = (std_m & (ub >= ts[:, None])) | (open_m & (ub >= to[:, None]))
+        return keep.any(axis=0), start_row
+
+    qs = (q_hvs_p.reshape(nqb, QB, -1), q_pmz.reshape(nqb, QB),
+          q_charge.reshape(nqb, QB), thr_std.reshape(nqb, QB),
+          thr_open.reshape(nqb, QB))
+    keep, starts = jax.lax.map(one_qblock, qs)             # (nqb, rk), (nqb,)
+    n = db.pmz.shape[0]
+    idx = (starts[:, None] + jnp.arange(rk, dtype=jnp.int32)[None, :])
+    flags = jnp.zeros((n,), jnp.int32).at[idx.reshape(-1)].max(
+        keep.reshape(-1).astype(jnp.int32))
+    return flags > 0
+
+
+@partial(jax.jit, static_argnames=("params", "dim"))
+def _rescore_rows_padded(r_hvs, r_rows, r_pmz, r_charge, q_hvs, q_pmz,
+                         q_charge, *, params: SearchParams, dim: int):
+    """Stage B / seed pass: exact dual-window top-k over a gathered row set.
+
+    ``r_*`` are (S,) padded candidate arrays — global padded-DB rows in
+    ASCENDING order (selection ties resolve to the lowest row, matching the
+    full scan), padding entries carrying ``r_pmz == PAD_PMZ`` /
+    ``r_rows == -1``. Queries are the sorted/padded layout. Returns four
+    (Qp, top_k) arrays: std_sim, std_row, open_sim, open_row — rows GLOBAL.
+    """
+    p = params
+    QB = p.q_block
+    nqb = q_hvs.shape[0] // QB
+    S = r_rows.shape[0]
+    tile = backends_mod.hamming_tile_fn(p.backend)
+
+    def one_qblock(args):
+        qh, qp, qc = args
+        ham = tile(qh, r_hvs, dim)
+        sims = dim - ham
+        dpmz = jnp.abs(qp[:, None] - r_pmz[None, :])
+        std_s, std_a, open_s, open_a = _find_topk_dual(
+            sims, dpmz, qp, qc, r_charge, r_pmz, p)
+        std_row = jnp.where(std_s >= 0,
+                            r_rows[jnp.clip(std_a, 0, S - 1)], -1)
+        open_row = jnp.where(open_s >= 0,
+                             r_rows[jnp.clip(open_a, 0, S - 1)], -1)
+        return std_s, std_row, open_s, open_row
+
+    qs = (q_hvs.reshape(nqb, QB, -1), q_pmz.reshape(nqb, QB),
+          q_charge.reshape(nqb, QB))
+    std_b, std_row, open_b, open_row = jax.lax.map(one_qblock, qs)
+    K = p.top_k
+    return (std_b.reshape(-1, K), std_row.reshape(-1, K),
+            open_b.reshape(-1, K), open_row.reshape(-1, K))
+
+
+def kth_thresholds(run, k: int):
+    """Per-query (thr_std, thr_open) int32 thresholds from (Qp, k) winner
+    arrays ``run = (std_sim, std_row, open_sim, open_row)`` — the k-th sim
+    where a k-th winner exists, ``_NEG_THRESHOLD`` otherwise. Any exact-
+    rescored candidate subset yields a VALID exact-mode threshold (subset
+    k-th <= true k-th)."""
+    neg = jnp.int32(_NEG_THRESHOLD)
+    thr_std = jnp.where(run[1][:, k - 1] >= 0, run[0][:, k - 1], neg)
+    thr_open = jnp.where(run[3][:, k - 1] >= 0, run[2][:, k - 1], neg)
+    return thr_std, thr_open
+
+
+def plan_seed_rows(row_pmz: np.ndarray, row_charge: np.ndarray,
+                   q_pmz_np: np.ndarray, q_charge_np: np.ndarray,
+                   tol_da: float) -> np.ndarray:
+    """Host seed plan: ascending padded-DB rows within ``tol_da`` Da (same
+    charge) of ANY query precursor — the rows whose exact rescore bootstraps
+    the per-query thresholds. Within one charge the layout's real rows are
+    globally pmz-ascending, so per charge this is two searchsorteds."""
+    n = row_pmz.shape[0]
+    mark = np.zeros((n,), bool)
+    for c in np.unique(q_charge_np):
+        rows_c = np.flatnonzero((row_charge == c) & (row_pmz < np.float32(
+            np.finfo(np.float32).max)))
+        if rows_c.size == 0:
+            continue
+        pm = row_pmz[rows_c]
+        q = np.sort(q_pmz_np[q_charge_np == c])
+        lo = np.searchsorted(q, pm - tol_da, side="left")
+        hi = np.searchsorted(q, pm + tol_da, side="right")
+        mark[rows_c[hi > lo]] = True
+    return np.flatnonzero(mark).astype(np.int64)
+
+
+def row_bucket(n: int, *, lo: int = 64) -> int:
+    """Power-of-two padding bucket for dynamic candidate-set sizes, so the
+    jitted rescore sees a bounded family of static shapes."""
+    b = lo
+    while b < max(n, 1):
+        b <<= 1
+    return b
+
+
+def pad_candidate_rows(rows: np.ndarray, bucket: int):
+    """(rows_padded, valid) host arrays for a candidate set: rows stay
+    ascending, padding gathers row 0 but is masked out via PAD sidecars."""
+    S = int(rows.shape[0])
+    rows_pad = np.zeros((bucket,), np.int64)
+    rows_pad[:S] = rows
+    valid = np.zeros((bucket,), bool)
+    valid[:S] = True
+    return rows_pad, valid
+
+
+def _prefix_search_padded(db: ReferenceDB, qh, qp, qc, *,
+                          params: SearchParams, dim: int,
+                          row_pmz_np: np.ndarray, row_charge_np: np.ndarray,
+                          qp_np: np.ndarray, qc_np: np.ndarray):
+    """Resident two-stage cascade over sorted/padded queries.
+
+    Seed pass (exact thresholds) -> stage-A prefix flags over the whole DB
+    -> stage-B exact rescore of survivors. Returns the same four (Qp, k)
+    arrays as ``_search_sorted_padded`` — bit-identical in exact mode.
+    """
+    p = params
+    K = p.top_k
+    Qp = qh.shape[0]
+    neg = jnp.full((Qp,), _NEG_THRESHOLD, jnp.int32)
+
+    def gather_device(rows_np: np.ndarray):
+        bucket = row_bucket(rows_np.shape[0])
+        rows_pad, valid = pad_candidate_rows(rows_np, bucket)
+        rows_j = jnp.asarray(rows_pad.astype(np.int32))
+        valid_j = jnp.asarray(valid)
+        r_hvs = db.hvs[rows_j]
+        r_pmz = jnp.where(valid_j, db.pmz[rows_j], PAD_PMZ)
+        r_charge = jnp.where(valid_j, db.charge[rows_j], -1)
+        r_rows = jnp.where(valid_j, rows_j, -1)
+        return r_hvs, r_rows, r_pmz, r_charge
+
+    seed_rows = plan_seed_rows(row_pmz_np, row_charge_np, qp_np, qc_np,
+                               p.prefix_seed_da)
+    if seed_rows.size:
+        thr_std, thr_open = kth_thresholds(
+            _rescore_rows_padded(*gather_device(seed_rows), qh, qp, qc,
+                                 params=p, dim=dim), K)
+    else:
+        thr_std, thr_open = neg, neg
+
+    flags = _prefix_flags(
+        ReferenceDB(hvs=db.hvs[:, :p.prefix_words], pmz=db.pmz,
+                    charge=db.charge, is_decoy=db.is_decoy,
+                    orig_idx=db.orig_idx, block_min=db.block_min,
+                    block_max=db.block_max, block_charge=db.block_charge,
+                    max_r=db.max_r),
+        qh[:, :p.prefix_words], qp, qc, thr_std, thr_open,
+        params=p, dim=dim)
+    surv = np.flatnonzero(np.asarray(flags))
+    if p.prefix_margin >= 0:
+        # Margin mode may prune true winners; folding the seed rows back in
+        # makes it no worse than the seed pass. Exact mode needs no union
+        # (every potential winner is flagged) but extra ascending candidates
+        # never change the exact selection, so one code path serves both.
+        surv = np.union1d(surv, seed_rows)
+    if surv.size == 0:
+        z = jnp.full((Qp, K), -1, jnp.int32)
+        return z, z, z, z
+    return _rescore_rows_padded(*gather_device(surv), qh, qp, qc,
+                                params=p, dim=dim)
 
 
 @functools.lru_cache(maxsize=512)
@@ -226,6 +465,24 @@ def validate_search_params(params: SearchParams, n_rows: int | None = None) -> N
             f"SearchParams.top_k={params.top_k} exceeds the reference DB's "
             f"{n_rows} rows — no query can have that many candidates; "
             f"lower top_k or grow the library")
+    if params.prefix_words < 0:
+        raise ValueError(
+            f"SearchParams.prefix_words must be >= 0, got {params.prefix_words}")
+    if params.prefix_words and params.prefix_seed_da <= 0.0:
+        raise ValueError(
+            f"SearchParams.prefix_seed_da must be > 0 when prefix_words is "
+            f"set, got {params.prefix_seed_da!r}")
+
+
+def validate_prefix_words(params: SearchParams, dim: int) -> None:
+    """The prefix must leave at least one full-width word of headroom —
+    ``prefix_words == n_words`` would be a slower full scan in disguise."""
+    n_words = dim // 32
+    if params.prefix_words >= n_words:
+        raise ValueError(
+            f"SearchParams.prefix_words={params.prefix_words} must be < "
+            f"n_words={n_words} (dim={dim}); use prefix_words=0 for a "
+            f"full-width scan")
 
 
 def sort_pad_plan(q_pmz: jax.Array, q_charge: jax.Array, q_block: int, *,
@@ -284,15 +541,23 @@ def narrow_search_params(block_meta, q_pmz, q_charge, params: SearchParams, *,
 def oms_search(db: ReferenceDB, q_hvs: jax.Array, q_pmz: jax.Array,
                q_charge: jax.Array, params: SearchParams, *, dim: int,
                q_pmz_np: np.ndarray | None = None,
-               q_charge_np: np.ndarray | None = None) -> SearchResult:
+               q_charge_np: np.ndarray | None = None,
+               row_pmz_np: np.ndarray | None = None,
+               row_charge_np: np.ndarray | None = None) -> SearchResult:
     """Full OMS search: sort queries, run the blocked scan, unsort, map rows
     back to original library indices, apply the min-similarity threshold.
 
     ``q_pmz_np``/``q_charge_np`` are optional host copies of the query
     precursor arrays; pass them (the pipeline does) to avoid a device->host
-    sync when the padding plan is already cached.
+    sync when the padding plan is already cached. With
+    ``params.prefix_words > 0`` the scan runs as a two-stage dimension
+    cascade (prefix-word prune + exact full-width rescore of survivors);
+    ``row_pmz_np``/``row_charge_np`` are the matching host copies of the
+    padded DB sidecars for its seed pass (pulled from the device if absent).
     """
     validate_search_params(params, db.n_rows)
+    if params.prefix_words:
+        validate_prefix_words(params, dim)
     gather, unpad = sort_pad_plan(q_pmz, q_charge, params.q_block,
                                   q_charge_np=q_charge_np)
     qh = q_hvs[gather]
@@ -301,8 +566,22 @@ def oms_search(db: ReferenceDB, q_hvs: jax.Array, q_pmz: jax.Array,
     # Padding queries keep their charge (so the block is charge-pure) but are
     # discarded on output.
 
-    std_b, std_row, open_b, open_row = _search_sorted_padded(
-        db, qh, qp, qc, params=params, dim=dim)
+    if params.prefix_words:
+        if row_pmz_np is None:
+            row_pmz_np = np.asarray(db.pmz)
+        if row_charge_np is None:
+            row_charge_np = np.asarray(db.charge)
+        if q_pmz_np is None:
+            q_pmz_np = np.asarray(q_pmz)
+        if q_charge_np is None:
+            q_charge_np = np.asarray(q_charge)
+        std_b, std_row, open_b, open_row = _prefix_search_padded(
+            db, qh, qp, qc, params=params, dim=dim,
+            row_pmz_np=row_pmz_np, row_charge_np=row_charge_np,
+            qp_np=q_pmz_np, qc_np=q_charge_np)
+    else:
+        std_b, std_row, open_b, open_row = _search_sorted_padded(
+            db, qh, qp, qc, params=params, dim=dim)
 
     # Drop padding rows, restore original query order.
     def _restore(x):

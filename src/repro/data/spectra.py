@@ -40,6 +40,7 @@ class LibraryConfig:
     open_tol_da: float = 75.0
     dropout: float = 0.15           # per-peak dropout probability in queries
     mz_jitter: float = 0.01         # Da jitter on query peaks
+    intensity_jitter: float = 0.2   # lognormal sigma on query peak intensities
     seed: int = 0
 
 
@@ -88,7 +89,7 @@ def _make_queries(key, refs: SpectraSet, cfg: LibraryConfig):
     # Peak dropout + intensity jitter + m/z jitter.
     keep = jax.random.bernoulli(kd, 1.0 - cfg.dropout, (Q, P)) & valid
     mz = mz + jax.random.normal(kj, (Q, P)) * cfg.mz_jitter
-    inten = inten * jnp.exp(jax.random.normal(ki, (Q, P)) * 0.2)
+    inten = inten * jnp.exp(jax.random.normal(ki, (Q, P)) * cfg.intensity_jitter)
 
     # Plant modifications: shift the precursor by Δ and shift all fragment
     # peaks above a random breakpoint by the same Δ (PTM on a suffix residue).

@@ -102,6 +102,23 @@ def _serving_args(ap):
                     help="ranked winners kept per query and window")
     ap.add_argument("--exhaustive", action="store_true",
                     help="HyperOMS-style full scan (baseline)")
+    _prefix_args(ap)
+
+
+def _prefix_args(ap):
+    """Dimension-cascade knobs (search/oneshot/serve): prefix-word prune at
+    low Dhv, exact full-width rescore of the survivors."""
+    ap.add_argument("--prefix-words", type=int, default=0,
+                    help="stage-A packed words per candidate (0 = full-width "
+                         "scan); with the default exact margin the results "
+                         "stay bit-identical to the full scan")
+    ap.add_argument("--prefix-margin", type=int, default=-1,
+                    help="survivor slack in bits; -1 keeps the exact "
+                         "lower-bound margin (dim - 32*prefix_words), "
+                         "smaller values prune harder but may drop matches")
+    ap.add_argument("--prefix-seed-da", type=float, default=1.0,
+                    help="precursor window (Da) of the exact seed pass that "
+                         "bootstraps the per-query pruning thresholds")
 
 
 def _cascade_args(ap):
@@ -231,7 +248,9 @@ def cmd_search(argv) -> None:
     pipe = OMSPipeline.from_store(
         args.store, max_r=args.max_r, q_block=args.q_block,
         open_tol_da=args.open_tol, backend=args.backend, top_k=args.top_k,
-        encode_backend=args.encode_backend, encode_batch=args.encode_batch)
+        encode_backend=args.encode_backend, encode_batch=args.encode_batch,
+        prefix_words=args.prefix_words, prefix_margin=args.prefix_margin,
+        prefix_seed_da=args.prefix_seed_da)
     t_load = time.perf_counter() - t0
     print(f"[oms search] cold-started {pipe.db.n_rows} rows "
           f"({pipe.db.n_blocks} blocks of {pipe.cfg.max_r}) from {args.store} "
@@ -287,6 +306,7 @@ def cmd_serve(argv) -> None:
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
                     help="max wait after the first queued query before the "
                          "coalesced batch is scanned")
+    _prefix_args(ap)
     _cascade_args(ap)
     _encode_backend_args(ap)
     args = ap.parse_args(argv)
@@ -300,7 +320,9 @@ def cmd_serve(argv) -> None:
         args.store, max_r=args.max_r, q_block=args.q_block,
         open_tol_da=args.open_tol, backend=args.backend, top_k=args.top_k,
         encode_backend=args.encode_backend, encode_batch=args.encode_batch,
-        resident=args.resident, slab_rows=args.slab_rows)
+        resident=args.resident, slab_rows=args.slab_rows,
+        prefix_words=args.prefix_words, prefix_margin=args.prefix_margin,
+        prefix_seed_da=args.prefix_seed_da)
     t_load = time.perf_counter() - t0
     if args.resident:
         mode = "resident"
@@ -311,6 +333,10 @@ def cmd_serve(argv) -> None:
     if args.cascade:
         mode += (", cascade off-stage1" if args.no_stage1 else
                  f", cascade narrow={args.narrow_tol_da} Da")
+    if args.prefix_words:
+        mode += (f", prefix {args.prefix_words} words"
+                 + ("" if args.prefix_margin < 0
+                    else f" (margin {args.prefix_margin})"))
     print(f"[oms serve] cold-started {args.store} in {t_load:.2f}s — {mode}; "
           f"backend={args.backend} top_k={args.top_k} "
           f"max_batch={args.max_batch} max_wait={args.max_wait_ms}ms",
@@ -381,7 +407,8 @@ def cmd_serve(argv) -> None:
         if pipe.engine is not None and pipe.engine.last_stats:
             s = pipe.engine.last_stats
             stats += (f", last scan {s.n_scanned}/{s.n_slabs} slabs of "
-                      f"{s.slab_rows} rows")
+                      f"{s.slab_rows} rows ({s.scanned_rows} row-reads, "
+                      f"{s.scanned_bytes / 2**20:.2f} MiB)")
         bad = f", {n_bad} malformed rejected" if n_bad else ""
         print(f"[oms serve] answered {n} queries in {dt:.2f}s "
               f"({n / max(dt, 1e-9):.0f} q/s, {batcher.n_batches} "
@@ -458,7 +485,10 @@ def cmd_oneshot(argv) -> None:
                     q_block=args.q_block, open_tol_da=args.open_tol,
                     backend=args.backend, top_k=args.top_k,
                     encode_backend=args.encode_backend,
-                    encode_batch=args.encode_batch)
+                    encode_batch=args.encode_batch,
+                    prefix_words=args.prefix_words,
+                    prefix_margin=args.prefix_margin,
+                    prefix_seed_da=args.prefix_seed_da)
     ds = _dataset(args)
     t0 = time.perf_counter()
     pipe = OMSPipeline(cfg, ds.refs)

@@ -41,8 +41,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.registry import contract, declare
-from repro.core.search import (SearchParams, SearchResult,
-                               _search_sorted_padded, sort_pad_plan,
+from repro.core.search import (SearchParams, SearchResult, _NEG_THRESHOLD,
+                               _prefix_flags, _rescore_rows_padded,
+                               _search_sorted_padded, kth_thresholds,
+                               pad_candidate_rows, plan_seed_rows, row_bucket,
+                               sort_pad_plan, validate_prefix_words,
                                validate_search_params)
 from repro.kernels.topk import merge_topk
 from repro.serve.slabs import (SlabPlan, StoreLayout, plan_slabs, slab_arrays,
@@ -50,11 +53,20 @@ from repro.serve.slabs import (SlabPlan, StoreLayout, plan_slabs, slab_arrays,
 
 
 class StreamStats(NamedTuple):
-    """Per-call scan accounting (exposed for logs/benchmarks)."""
+    """Per-call scan accounting (exposed for logs/benchmarks).
 
-    n_slabs: int       # slabs in the plan
-    n_scanned: int     # slabs actually streamed for this batch
-    slab_rows: int     # rows per slab (the device-memory bound)
+    ``scanned_rows`` counts row-reads from the store shards (a survivor row
+    re-read at full width counts again); ``scanned_bytes`` is the matching
+    packed-HV byte count — prefix-stage rows contribute only their
+    ``prefix_words * 4`` bytes, which is where the dimension cascade's
+    bandwidth saving shows up.
+    """
+
+    n_slabs: int            # slabs in the plan
+    n_scanned: int          # slabs actually streamed for this batch
+    slab_rows: int          # rows per slab (the device-memory bound)
+    scanned_rows: int = 0   # store row-reads (seed + scan + rescore)
+    scanned_bytes: int = 0  # packed-HV bytes those reads pulled
 
 
 # The slab step — the capped _search_sorted_padded call plus the offset/
@@ -128,12 +140,24 @@ class StreamingEngine:
         return cache[device]
 
     # ------------------------------------------------------------------
+    def _slab_real_rows(self, s: int) -> int:
+        """Non-padding layout rows slab ``s`` reads from the store shards."""
+        b0 = s * self.plan.slab_blocks
+        b1 = min(b0 + self.plan.slab_blocks, self.layout.n_blocks)
+        return self.layout.real_rows(b0 * self.plan.max_r,
+                                     b1 * self.plan.max_r)
+
     def search_encoded(self, q_hvs, q_pmz, q_charge, params: SearchParams, *,
                        dim: int, q_pmz_np: np.ndarray | None = None,
                        q_charge_np: np.ndarray | None = None) -> SearchResult:
         """Streamed equivalent of :func:`repro.core.search.oms_search` —
-        same inputs, bit-identical :class:`SearchResult`."""
+        same inputs, bit-identical :class:`SearchResult`. With
+        ``params.prefix_words > 0`` the slab scan runs as the two-stage
+        dimension cascade (prefix-word slab reads + full-width survivor
+        fetches) — still bit-identical in exact mode."""
         validate_search_params(params, self.layout.n_rows)
+        if params.prefix_words:
+            validate_prefix_words(params, dim)
         Q, K = q_hvs.shape[0], params.top_k
         qp_np = np.asarray(q_pmz if q_pmz_np is None else q_pmz_np)
         qc_np = np.asarray(q_charge if q_charge_np is None else q_charge_np)
@@ -144,15 +168,39 @@ class StreamingEngine:
             touched = np.flatnonzero(slabs_touched(
                 self.layout, qp_np, qc_np, open_tol_da=params.open_tol_da,
                 plan=self.plan)).tolist()
-        self.last_stats = StreamStats(self.plan.n_slabs, len(touched),
-                                      self.plan.slab_rows)
 
         gather, unpad = sort_pad_plan(q_pmz, q_charge, params.q_block,
                                       q_charge_np=qc_np)
         qh, qp, qc = q_hvs[gather], q_pmz[gather], q_charge[gather]
+
+        if params.prefix_words:
+            run = self._scan_prefix(touched, qh, qp, qc, params, dim,
+                                    qp_np, qc_np)
+        else:
+            run = self._scan_full(touched, qh, qp, qc, params, dim)
+
+        if run is None:          # no slab intersects any query window
+            z = np.full((Q, K), -1, np.int32)
+            return SearchResult(*(jnp.asarray(z),) * 6)
+
+        # Drop padding queries, restore input order, then finalize on host
+        # (orig_idx/is_decoy sidecars never go to the device).
+        unpad_np = np.asarray(unpad)
+        std_b, std_row, open_b, open_row = (np.asarray(x)[unpad_np]
+                                            for x in run)
+        std = self._finalize(std_b, std_row, params.min_sim)
+        opn = self._finalize(open_b, open_row, params.min_sim)
+        return SearchResult(std_idx=std[0], std_sim=std[1],
+                            open_idx=opn[0], open_sim=opn[1],
+                            std_row=std[2], open_row=opn[2])
+
+    def _scan_full(self, touched, qh, qp, qc, params: SearchParams, dim: int):
+        """Full-width slab loop (the original streaming path)."""
+        K = params.top_k
         local = params._replace(
             k_blocks=min(params.k_blocks, self.plan.slab_blocks))
-
+        W = self.layout.n_words
+        rows_read = 0
         run = None
         merge_dev = self.devices[0] if self.devices else None
         qcache: dict = {}
@@ -171,6 +219,7 @@ class StreamingEngine:
                                       touched[j + 1], self.plan)
                 else:
                     nxt = None
+                rows_read += self._slab_real_rows(s)
                 dev = self._device_for(j)
                 db_dev = (jax.device_put(db_np, dev) if dev is not None
                           else jax.device_put(db_np))
@@ -184,21 +233,104 @@ class StreamingEngine:
         finally:
             if pool:
                 pool.shutdown(wait=False)
+        self.last_stats = StreamStats(self.plan.n_slabs, len(touched),
+                                      self.plan.slab_rows,
+                                      scanned_rows=rows_read,
+                                      scanned_bytes=rows_read * W * 4)
+        return run
 
-        if run is None:          # no slab intersects any query window
-            z = np.full((Q, K), -1, np.int32)
-            return SearchResult(*(jnp.asarray(z),) * 6)
+    def _scan_prefix(self, touched, qh, qp, qc, params: SearchParams,
+                     dim: int, qp_np, qc_np):
+        """Dimension-cascade slab loop: seed pass for exact thresholds, a
+        prefix-words read+scan per touched slab, full-width fetch + exact
+        rescore of the survivors, fold into the running winners.
 
-        # Drop padding queries, restore input order, then finalize on host
-        # (orig_idx/is_decoy sidecars never go to the device).
-        unpad_np = np.asarray(unpad)
-        std_b, std_row, open_b, open_row = (np.asarray(x)[unpad_np]
-                                            for x in run)
-        std = self._finalize(std_b, std_row, params.min_sim)
-        opn = self._finalize(open_b, open_row, params.min_sim)
-        return SearchResult(std_idx=std[0], std_sim=std[1],
-                            open_idx=opn[0], open_sim=opn[1],
-                            std_row=std[2], open_row=opn[2])
+        Runs on the default device (the multi-device round-robin applies to
+        the full-width path only — the cascade's per-slab survivor sync is
+        inherently sequential)."""
+        p = params
+        K, P, W = p.top_k, p.prefix_words, self.layout.n_words
+        local = p._replace(k_blocks=min(p.k_blocks, self.plan.slab_blocks))
+        rows_read = 0
+        bytes_read = 0
+
+        def rescore(rows_np: np.ndarray):
+            """Exact dual-window top-k over global layout rows (full width)."""
+            bucket = row_bucket(rows_np.shape[0])
+            rows_pad, valid = pad_candidate_rows(rows_np, bucket)
+            r_hvs = jnp.asarray(self.layout.gather_rows(rows_pad))
+            r_pmz = jnp.asarray(np.where(valid, self.layout.pmz[rows_pad],
+                                         np.float32(np.finfo(np.float32).max)))
+            r_charge = jnp.asarray(np.where(
+                valid, self.layout.charge[rows_pad], -1).astype(np.int32))
+            r_rows = jnp.asarray(np.where(valid, rows_pad, -1).astype(np.int32))
+            return _rescore_rows_padded(r_hvs, r_rows, r_pmz, r_charge,
+                                        qh, qp, qc, params=p, dim=dim)
+
+        Qp = qh.shape[0]
+        neg = jnp.full((Qp,), _NEG_THRESHOLD, jnp.int32)
+        seed_rows = plan_seed_rows(self.layout.pmz, self.layout.charge,
+                                   qp_np, qc_np, p.prefix_seed_da)
+        if seed_rows.size:
+            thr_std, thr_open = kth_thresholds(rescore(seed_rows), K)
+            rows_read += seed_rows.size
+            bytes_read += seed_rows.size * W * 4
+        else:
+            thr_std, thr_open = neg, neg
+
+        run = None
+        pool = ThreadPoolExecutor(max_workers=1) if (
+            self._prefetch and len(touched) > 1) else None
+        slab_p = partial(slab_arrays, n_words=P)
+        try:
+            nxt = (pool.submit(slab_p, self.layout, touched[0], self.plan)
+                   if pool else None)
+            for j, s in enumerate(touched):
+                db_np = nxt.result() if nxt else slab_p(
+                    self.layout, s, self.plan)
+                if pool and j + 1 < len(touched):
+                    nxt = pool.submit(slab_p, self.layout, touched[j + 1],
+                                      self.plan)
+                else:
+                    nxt = None
+                n_real = self._slab_real_rows(s)
+                rows_read += n_real
+                bytes_read += n_real * P * 4
+                if run is not None:
+                    # Tighten with the running k-th — still a subset k-th,
+                    # so the exact-mode guarantee is untouched.
+                    rs, ro = kth_thresholds(run, K)
+                    ts, to = jnp.maximum(thr_std, rs), jnp.maximum(thr_open, ro)
+                else:
+                    ts, to = thr_std, thr_open
+                flags = _prefix_flags(jax.device_put(db_np), qh[:, :P],
+                                      qp, qc, ts, to, params=local, dim=dim)
+                surv = np.flatnonzero(np.asarray(flags))
+                if surv.size == 0:
+                    continue
+                surv_global = surv + s * self.plan.slab_rows
+                rows_read += surv.size
+                bytes_read += surv.size * W * 4
+                part = rescore(surv_global)
+                run = part if run is None else _merge_partials(run, part, K)
+        finally:
+            if pool:
+                pool.shutdown(wait=False)
+
+        if p.prefix_margin >= 0 and seed_rows.size:
+            # Margin mode may prune true winners; folding the seed-pass
+            # winners back in makes it no worse than the seed pass. (Exact
+            # mode re-finds every seed winner as a survivor, and merging
+            # seed results here would let a seed winner beat an equal-sim
+            # LOWER row from an earlier slab — so exact mode must not.)
+            part = rescore(seed_rows)
+            run = part if run is None else _merge_partials(run, part, K)
+
+        self.last_stats = StreamStats(self.plan.n_slabs, len(touched),
+                                      self.plan.slab_rows,
+                                      scanned_rows=rows_read,
+                                      scanned_bytes=bytes_read)
+        return run
 
     def _finalize(self, best, row, min_sim):
         """Host mirror of ``oms_search``'s finalize: min-sim threshold, map

@@ -143,19 +143,43 @@ class StoreLayout:
                                       self.src_row))
 
     # -- HV payload ---------------------------------------------------------
-    def read_hv_rows(self, lo: int, hi: int) -> np.ndarray:
+    def read_hv_rows(self, lo: int, hi: int,
+                     n_words: int | None = None) -> np.ndarray:
         """Gather padded rows [lo, hi) of the packed HVs from the mmapped
         runs (zeros on padding rows). Within each run the gathered rows are
-        ascending (the merge is stable), so shard reads stay sequential."""
-        out = np.zeros((hi - lo, self.n_words), np.uint32)
+        ascending (the merge is stable), so shard reads stay sequential.
+        ``n_words`` < the full width reads only that word prefix per row —
+        the dimension cascade's stage-A scanned-bytes saving."""
+        W = self.n_words if n_words is None else n_words
+        out = np.zeros((hi - lo, W), np.uint32)
         src = self.src_run[lo:hi]
         rows = self.src_row[lo:hi]
         for run in np.unique(src):
             if run < 0:
                 continue
             m = src == run
-            out[m] = np.asarray(self._hv_runs[run][rows[m]])
+            out[m] = np.asarray(self._hv_runs[run][rows[m], :W])
         return out
+
+    def gather_rows(self, rows_padded: np.ndarray,
+                    n_words: int | None = None) -> np.ndarray:
+        """Gather an ARBITRARY ascending set of padded-layout rows (the
+        cascade's seed / survivor fetches). Padding rows come back zero."""
+        W = self.n_words if n_words is None else n_words
+        out = np.zeros((rows_padded.shape[0], W), np.uint32)
+        src = self.src_run[rows_padded]
+        rows = self.src_row[rows_padded]
+        for run in np.unique(src):
+            if run < 0:
+                continue
+            m = src == run
+            out[m] = np.asarray(self._hv_runs[run][rows[m], :W])
+        return out
+
+    def real_rows(self, lo: int, hi: int) -> int:
+        """Count of non-padding layout rows in [lo, hi) — the rows whose
+        bytes a slab read actually pulls from the store shards."""
+        return int((self.src_run[lo:hi] >= 0).sum())
 
 
 # ---------------------------------------------------------------------------
@@ -216,11 +240,14 @@ def slabs_touched(layout, q_pmz: np.ndarray, q_charge: np.ndarray, *,
     return padded.reshape(plan.n_slabs, plan.slab_blocks).any(axis=1)
 
 
-def slab_arrays(layout: StoreLayout, s: int, plan: SlabPlan) -> ReferenceDB:
+def slab_arrays(layout: StoreLayout, s: int, plan: SlabPlan,
+                n_words: int | None = None) -> ReferenceDB:
     """Assemble slab ``s`` as a host-side ReferenceDB (numpy leaves): the
     slab's rows/blocks sliced from the padded layout, tail-padded to the
     fixed slab shape so every slab hits one jit cache entry. This is the
     only place the packed HV payload is materialised — one slab's worth.
+    ``n_words`` builds a PREFIX slab (stage A of the dimension cascade):
+    only that many packed words per row are read from the store.
     """
     b0 = s * plan.slab_blocks
     b1 = min(b0 + plan.slab_blocks, layout.n_blocks)
@@ -228,9 +255,10 @@ def slab_arrays(layout: StoreLayout, s: int, plan: SlabPlan) -> ReferenceDB:
         raise ValueError(f"slab {s} out of range (n_slabs={plan.n_slabs})")
     r0, r1 = b0 * plan.max_r, b1 * plan.max_r
     rows, nb = plan.slab_rows, plan.slab_blocks
+    W = layout.n_words if n_words is None else n_words
 
-    hvs = np.zeros((rows, layout.n_words), np.uint32)
-    hvs[:r1 - r0] = layout.read_hv_rows(r0, r1)
+    hvs = np.zeros((rows, W), np.uint32)
+    hvs[:r1 - r0] = layout.read_hv_rows(r0, r1, n_words=W)
     pmz = np.full((rows,), _F32_MAX, np.float32)
     pmz[:r1 - r0] = layout.pmz[r0:r1]
     charge = np.full((rows,), -1, np.int32)

@@ -335,8 +335,10 @@ class TestRunnerSmoke:
 
         report = runner.run(with_recompile=False)
         assert report["ok"], runner.summarize(report)
-        assert report["n_combinations"] == 96
+        # 4 encode x 6 search x 2 path x (cascade on/off + prefix on)
+        assert report["n_combinations"] == 144
         assert report["n_checks"] > report["n_combinations"]
         sample = report["combos"][0]
-        assert {"encode", "search", "path", "cascade",
+        assert {"encode", "search", "path", "cascade", "prefix",
                 "contracts", "passed"} <= set(sample)
+        assert any(c["prefix"] for c in report["combos"])

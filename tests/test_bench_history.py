@@ -11,7 +11,7 @@ import json
 import pytest
 
 from benchmarks.history import (append_rows, compare, load_history, load_run,
-                                main)
+                                main, structural_columns)
 
 
 def _row(name, us, derived="", rev="abc1234"):
@@ -49,6 +49,42 @@ class TestCompare:
         base = {"x": _row("x", 1000.0)}
         assert compare(base, [_row("x", 400.0)]) == []
         assert compare(base, [_row("x", 1100.0)], max_regress=0.05)
+
+
+class TestStructuralColumns:
+    def test_allowlist_parse(self):
+        cols = structural_columns(
+            "q_per_s=4214 scanned_rows=4096 scanned_bytes=524288 "
+            "device_peak=2.25MiB reduction=2.33x")
+        # timing-derived tokens (q_per_s, reduction) are excluded
+        assert cols == {"scanned_rows": "4096", "scanned_bytes": "524288",
+                        "device_peak": "2.25"}
+
+    def test_structural_drift_fails_at_zero_tolerance(self):
+        base = {"x": _row("x", 1000.0, derived="scanned_bytes=1000")}
+        msgs = compare(base, [_row("x", 1000.0, derived="scanned_bytes=1001")])
+        assert len(msgs) == 1 and "structural scanned_bytes" in msgs[0]
+
+    def test_structural_gate_ignores_min_us(self):
+        # a micro-row's timing is exempt, its footprint is not
+        base = {"x": _row("x", 10.0, derived="device_peak=1.00MiB")}
+        msgs = compare(base, [_row("x", 10.0, derived="device_peak=2.00MiB")],
+                       min_us=100.0)
+        assert len(msgs) == 1 and "structural device_peak" in msgs[0]
+
+    def test_new_or_missing_keys_are_exempt(self):
+        # schema evolution: keys only on one side never fire
+        base = {"x": _row("x", 1000.0, derived="sp/s only, no tokens")}
+        fresh = [_row("x", 1000.0, derived="scanned_bytes=42")]
+        assert compare(base, fresh) == []
+        assert compare({"x": fresh[0]}, [base["x"]]) == []
+
+    def test_equal_structural_passes(self):
+        base = {"x": _row("x", 1000.0,
+                          derived="scanned_rows=7 scanned_bytes=896")}
+        assert compare(base, [_row("x", 1100.0,
+                                   derived="scanned_rows=7 "
+                                           "scanned_bytes=896")]) == []
 
 
 class TestHistoryIO:
@@ -94,7 +130,8 @@ class TestMain:
         # guards against malformed hand-edits to BENCH_history.
         import os
         root = os.path.join(os.path.dirname(__file__), "..")
-        for suite in ("encode", "stream"):
+        for suite in ("encode", "stream", "cascade", "fused", "ingest",
+                      "dimension"):
             hist = os.path.join(root, "BENCH_history", f"{suite}.jsonl")
             rows = list(load_history(hist).values())
             assert rows, f"BENCH_history/{suite}.jsonl is empty"

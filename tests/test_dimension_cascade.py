@@ -1,0 +1,264 @@
+"""Dimension-cascade pruning (prefix-word scan + exact full-width rescore).
+
+Tentpole guarantee under test: with the default exact margin the two-stage
+search — partial Hamming over the first ``prefix_words`` packed words, then
+a full-width rescore of the bound-survivors — is bit-identical to the
+full-width scan, on the resident path AND on the streaming engine at every
+slab size (1-row, awkward-prime, whole-store), including tie-heavy stores
+and zero-seed query batches.
+
+The property layer pins the math the guarantee rests on: the prefix bound
+``ub = dim - ham_prefix`` upper-bounds the full similarity (equivalently,
+prefix distance lower-bounds full distance), and an exact k-th threshold
+over ANY candidate subset never flags out a true top-k row.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import OMSConfig, OMSPipeline
+from repro.core.search import (SearchParams, pad_candidate_rows,
+                               plan_seed_rows, prefix_margin_bits,
+                               row_bucket, validate_search_params)
+from repro.data.spectra import LibraryConfig, make_dataset
+
+CFG = OMSConfig(dim=512, max_r=32, q_block=8, n_levels=16,
+                prefix_seed_da=0.5)
+DS = dict(n_refs=384, n_queries=32, seed=5)
+PREFIX = 4          # of W = 512/32 = 16 packed words
+
+
+def _assert_result_equal(a, b, ctx=""):
+    for f in a._fields:
+        assert (np.asarray(getattr(a, f)) == np.asarray(getattr(b, f))).all(), \
+            (ctx, f)
+
+
+def _popcount_rows(x: np.ndarray) -> np.ndarray:
+    return np.unpackbits(x.view(np.uint8), axis=-1).astype(np.int32).sum(-1)
+
+
+# ---------------------------------------------------------------------------
+# Property layer: the bound and the subset-k-th cutoff
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 1000), st.integers(1, 15))
+@settings(max_examples=20, deadline=None)
+def test_prefix_distance_lower_bounds_full_distance(seed, prefix_words):
+    """ham(prefix) <= ham(full)  <=>  ub = dim - ham_prefix >= full_sim."""
+    rng = np.random.default_rng(seed)
+    W, dim = 16, 512
+    refs = rng.integers(0, 1 << 32, (64, W), dtype=np.uint32)
+    q = rng.integers(0, 1 << 32, (W,), dtype=np.uint32)
+    ham_full = _popcount_rows(refs ^ q[None, :])
+    ham_pref = _popcount_rows(refs[:, :prefix_words] ^ q[None, :prefix_words])
+    full_sim = dim - ham_full
+    ub = (32 * prefix_words - ham_pref) + (dim - 32 * prefix_words)
+    assert (ham_pref <= ham_full).all()
+    assert (ub >= full_sim).all()
+
+
+@given(st.integers(0, 1000), st.integers(1, 15), st.integers(1, 4),
+       st.integers(2, 16))
+@settings(max_examples=20, deadline=None)
+def test_exact_cutoff_never_prunes_a_true_topk_row(seed, prefix_words, k,
+                                                   n_distinct):
+    """T = k-th exact sim over ANY subset => every true top-k row survives
+    the prefix bound. n_distinct small makes the pool tie-heavy: rows are
+    drawn from few distinct HVs, so exact score ties are everywhere."""
+    rng = np.random.default_rng(seed)
+    W, dim, n = 16, 512, 48
+    pool = rng.integers(0, 1 << 32, (n_distinct, W), dtype=np.uint32)
+    refs = pool[rng.integers(0, n_distinct, n)]
+    q = rng.integers(0, 1 << 32, (W,), dtype=np.uint32)
+    full_sim = dim - _popcount_rows(refs ^ q[None, :])
+    ham_pref = _popcount_rows(refs[:, :prefix_words] ^ q[None, :prefix_words])
+    ub = (32 * prefix_words - ham_pref) + (dim - 32 * prefix_words)
+
+    subset = rng.choice(n, size=rng.integers(k, n + 1), replace=False)
+    T = np.sort(full_sim[subset])[-k]          # subset k-th <= true k-th
+    true_topk = np.argsort(-full_sim, kind="stable")[:k]
+    assert (ub[true_topk] >= T).all()
+    # ties with the k-th true score survive too (the bound uses >=)
+    tied = np.flatnonzero(full_sim == np.sort(full_sim)[-k])
+    assert (ub[tied] >= T).all()
+
+
+def test_prefix_margin_bits_exact_and_clamped():
+    p = SearchParams(prefix_words=4)
+    assert prefix_margin_bits(p, 512) == 512 - 128          # exact = rest
+    assert prefix_margin_bits(p._replace(prefix_margin=10), 512) == 10
+    assert prefix_margin_bits(p._replace(prefix_margin=10 ** 6), 512) == 384
+
+
+def test_row_bucket_and_padding():
+    assert row_bucket(0) == 64 and row_bucket(64) == 64
+    assert row_bucket(65) == 128 and row_bucket(1000) == 1024
+    rows, valid = pad_candidate_rows(np.array([3, 7, 11]), 64)
+    assert rows.shape == (64,) and valid.sum() == 3
+    assert (rows[:3] == [3, 7, 11]).all() and (rows[3:] == 0).all()
+
+
+def test_validate_rejects_bad_prefix_params():
+    with pytest.raises(ValueError):
+        validate_search_params(SearchParams(prefix_words=-1))
+    with pytest.raises(ValueError):
+        validate_search_params(SearchParams(prefix_words=4,
+                                            prefix_seed_da=0.0))
+
+
+# ---------------------------------------------------------------------------
+# Resident path: bit-identity and margin semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    ds = make_dataset(LibraryConfig(**DS))
+    pipe = OMSPipeline(CFG, ds.refs, chunk_rows=160)
+    path = str(tmp_path_factory.mktemp("dimcasc") / "store")
+    OMSPipeline.ingest(CFG, ds.refs, path, chunk_rows=160)
+    encoded = pipe.encode_queries(ds.queries)
+    return ds, pipe, path, encoded
+
+
+@given(st.integers(1, 15))
+@settings(max_examples=5, deadline=None)
+def test_resident_prefix_equals_full_any_width(prefix_words):
+    ds = make_dataset(LibraryConfig(**DS))
+    pipe = OMSPipeline(CFG, ds.refs)
+    hvs, qp, qc = pipe.encode_queries(ds.queries)
+    full = pipe.search_encoded(hvs, qp, qc).result
+    pref = pipe.search_encoded(hvs, qp, qc, prefix_words=prefix_words).result
+    _assert_result_equal(full, pref, f"prefix_words={prefix_words}")
+
+
+def test_resident_prefix_equals_full_topk(setup):
+    _, pipe, _, (hvs, qp, qc) = setup
+    full = pipe.search_encoded(hvs, qp, qc, top_k=3).result
+    pref = pipe.search_encoded(hvs, qp, qc, top_k=3,
+                               prefix_words=PREFIX).result
+    _assert_result_equal(full, pref, "top_k=3")
+
+
+def test_margin_rest_equals_exact_equals_full(setup):
+    """prefix_margin == dim - 32*P is literally the exact bound."""
+    _, pipe, _, (hvs, qp, qc) = setup
+    rest = CFG.dim - 32 * PREFIX
+    full = pipe.search_encoded(hvs, qp, qc).result
+    by_margin = pipe.search_encoded(hvs, qp, qc, prefix_words=PREFIX,
+                                    prefix_margin=rest).result
+    _assert_result_equal(full, by_margin, "margin=rest")
+
+
+def test_margin_zero_smoke_valid_rows(setup):
+    """Aggressive margin may drop true winners but must stay well-formed:
+    any reported row is a real in-window row of the right charge."""
+    ds, pipe, _, (hvs, qp, qc) = setup
+    res = pipe.search_encoded(hvs, qp, qc, prefix_words=PREFIX,
+                              prefix_margin=0).result
+    rows = np.asarray(res.open_row[:, 0])
+    ok = rows >= 0
+    assert ok.any()
+    dbp = np.asarray(pipe.db.pmz)
+    dbc = np.asarray(pipe.db.charge)
+    qp_np = np.asarray(ds.queries.pmz)
+    qc_np = np.asarray(ds.queries.charge)
+    assert (np.abs(dbp[rows[ok]] - qp_np[ok]) <= CFG.open_tol_da + 1e-3).all()
+    assert (dbc[rows[ok]] == qc_np[ok]).all()
+
+
+def test_prefix_with_zero_seed_rows(setup):
+    """All-modified queries + a microscopic seed window => no seed rows, all
+    thresholds start at -inf, every in-window row survives stage A — still
+    bit-identical to the full scan."""
+    _, pipe, _, _ = setup
+    ds = make_dataset(LibraryConfig(**{**DS, "modified_frac": 1.0}))
+    hvs, qp, qc = pipe.encode_queries(ds.queries)
+    row_pmz, row_charge, _ = pipe._host_sidecars
+    assert plan_seed_rows(row_pmz, row_charge, np.asarray(qp),
+                          np.asarray(qc), 1e-9).size == 0
+    cfg = dataclasses.replace(CFG, prefix_seed_da=1e-9)
+    pipe_tiny = OMSPipeline(cfg, make_dataset(LibraryConfig(**DS)).refs)
+    full = pipe_tiny.search_encoded(hvs, qp, qc).result
+    pref = pipe_tiny.search_encoded(hvs, qp, qc, prefix_words=PREFIX).result
+    _assert_result_equal(full, pref, "zero-seed")
+
+
+def test_tie_heavy_store_prefix_equals_full():
+    """Duplicate reference spectra => identical HVs => exact score ties
+    across distinct rows; the (sim desc, row asc) ranking must survive the
+    cascade's survivor-gather round trip."""
+    ds = make_dataset(LibraryConfig(**DS))
+    idx = np.arange(int(ds.refs.mz.shape[0]))
+    idx[1::3] = idx[::3][: idx[1::3].size]      # every 3rd row duplicated
+    refs = type(ds.refs)(mz=ds.refs.mz[idx], intensity=ds.refs.intensity[idx],
+                         pmz=ds.refs.pmz[idx], charge=ds.refs.charge[idx])
+    pipe = OMSPipeline(CFG, refs)
+    hvs, qp, qc = pipe.encode_queries(ds.queries)
+    full = pipe.search_encoded(hvs, qp, qc, top_k=2).result
+    pref = pipe.search_encoded(hvs, qp, qc, top_k=2,
+                               prefix_words=PREFIX).result
+    _assert_result_equal(full, pref, "tie-heavy")
+
+
+def test_cascade_open_stage_prefix_equals_full(setup):
+    """The mass-window cascade with a prefix-pruned open stage (the 2x2's
+    fourth cell) reproduces the plain cascade bit-for-bit in exact mode."""
+    ds, pipe, _, (hvs, qp, qc) = setup
+    plain = pipe.search_cascade_encoded(hvs, qp, qc, narrow_tol_da=1.0)
+    pref = pipe.search_cascade_encoded(hvs, qp, qc, narrow_tol_da=1.0,
+                                       prefix_words=PREFIX)
+    _assert_result_equal(plain.result, pref.result, "cascade+prefix")
+    assert (plain.identified_stage1 == pref.identified_stage1).all()
+
+
+# ---------------------------------------------------------------------------
+# Streaming engine: bit-identity at every slab size + byte metering
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("slab_rows", [1, 97, 1 << 30])
+def test_streamed_prefix_bit_identity(setup, slab_rows):
+    _, pipe, path, (hvs, qp, qc) = setup
+    resident = pipe.search_encoded(hvs, qp, qc, top_k=2).result
+    sp = OMSPipeline.from_store(path, CFG, resident=False,
+                                slab_rows=slab_rows)
+    full = sp.search_encoded(hvs, qp, qc, top_k=2).result
+    pref = sp.search_encoded(hvs, qp, qc, top_k=2,
+                             prefix_words=PREFIX).result
+    _assert_result_equal(resident, full, f"slab={slab_rows} full")
+    _assert_result_equal(resident, pref, f"slab={slab_rows} prefix")
+
+
+def test_streamed_prefix_meters_scanned_bytes(setup):
+    """Stage-A slab reads are prefix-words wide: the byte meter must charge
+    P*4 per scanned row plus full width only for seeds + survivors, and on
+    pruning workloads come in under the full-width read total."""
+    _, pipe, path, (hvs, qp, qc) = setup
+    sp = OMSPipeline.from_store(path, CFG, resident=False, slab_rows=97)
+    sp.search_encoded(hvs, qp, qc)
+    s_full = sp.engine.last_stats
+    W = CFG.dim // 32
+    assert s_full.scanned_bytes == s_full.scanned_rows * W * 4
+
+    sp.search_encoded(hvs, qp, qc, prefix_words=PREFIX)
+    s_pref = sp.engine.last_stats
+    assert s_pref.scanned_bytes > 0
+    # prefix rows are metered at P*4 < W*4, so unless nearly every row
+    # survives, bytes drop below a full-width scan of the same rows
+    assert s_pref.scanned_bytes < s_pref.scanned_rows * W * 4
+
+
+def test_streamed_margin_mode_runs(setup):
+    """Inexact margin on the streamed path: well-formed rows, seeds folded
+    back in (results at least as good as the seed pass)."""
+    _, pipe, path, (hvs, qp, qc) = setup
+    sp = OMSPipeline.from_store(path, CFG, resident=False, slab_rows=97)
+    res = sp.search_encoded(hvs, qp, qc, prefix_words=PREFIX,
+                            prefix_margin=64).result
+    rows = np.asarray(res.open_row[:, 0])
+    assert (rows >= -1).all() and (rows >= 0).any()
