@@ -40,7 +40,7 @@ import sys
 # ratios, id rates) are deliberately absent.
 STRUCTURAL_KEYS = frozenset((
     "device_peak", "slab_cap", "scanned_rows", "scanned_bytes",
-    "max_intermediate", "store", "raw"))
+    "max_intermediate", "store", "raw", "model_bytes", "model_flops"))
 
 _TOKEN = re.compile(r"(\w+)=([0-9][0-9.]*)")
 

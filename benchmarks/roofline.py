@@ -3,6 +3,16 @@
 Also derives the OMS-engine roofline (the paper's workload) analytically from
 the same v5e constants, for the §Perf comparison of the paper-faithful VPU
 path vs the beyond-paper MXU path.
+
+``tune_sweeps`` runs the tile-sweep harness (``repro.tune.sweep``) over the
+tunable backends and reports measured-vs-modeled: per backend one row whose
+``us_per_call`` is the MODELED roofline bound at the hand-picked default
+tiles (deterministic — the history timing gate cannot flake on CI wall
+clock) and whose ``model_flops``/``model_bytes`` tokens are structural
+(0% drift tolerance in ``benchmarks/history.py``). The measured medians,
+the sweep winner, and the tuned-vs-default speedup ride along as
+non-structural derived tokens. Env knobs: ``BENCH_TUNE_DIM`` / ``_K`` /
+``_Q`` / ``_ROWS`` / ``_GRID`` / ``_ITERS``.
 """
 from __future__ import annotations
 
@@ -61,10 +71,43 @@ def oms_roofline(n_refs=1_160_000, n_queries=2048, dhv=4096, q_block=64,
          "16B/query winner merge — negligible by construction")
 
 
+def tune_sweeps(dim=512, k=2, q_rows=16, r_rows=1024, grid="tiny", iters=3):
+    """Tile-sweep rows for the tunable backends (see module docstring for
+    which tokens are structural vs timing-derived)."""
+    from repro import tune
+    from repro.tune import sweep as sweep_mod
+
+    results = sweep_mod.run_sweeps(tune.SWEPT_BACKENDS, dim=dim, k=k,
+                                   q_rows=q_rows, r_rows=r_rows, grid=grid,
+                                   iters=iters)
+    for be in sorted(results):
+        rows = results[be]
+        if not rows:
+            continue
+        win = rows[0]
+        want = tune.kernel_defaults(be)
+        default = next((r for r in rows if r.tiles == want), win)
+        speed = (default.median_us / win.median_us
+                 if win.median_us > 0 else 0.0)
+        emit(f"tune/{be}/d{dim}_q{q_rows}xr{r_rows}", default.t_bound_us,
+             f"model_flops={default.model_flops:.0f} "
+             f"model_bytes={default.model_bytes:.0f} "
+             f"default[{default.tiles_str()}] measured={default.median_us:.1f}us "
+             f"winner[{win.tiles_str()}] measured={win.median_us:.1f}us "
+             f"speedup_vs_default={speed:.2f}x "
+             f"roofline_frac={win.roofline_frac:.5f}")
+
+
 def main():
     if glob.glob("results/dryrun/*.json"):
         lm_table()
     oms_roofline()
+    tune_sweeps(dim=int(os.environ.get("BENCH_TUNE_DIM", 512)),
+                k=int(os.environ.get("BENCH_TUNE_K", 2)),
+                q_rows=int(os.environ.get("BENCH_TUNE_Q", 16)),
+                r_rows=int(os.environ.get("BENCH_TUNE_ROWS", 1024)),
+                grid=os.environ.get("BENCH_TUNE_GRID", "tiny"),
+                iters=int(os.environ.get("BENCH_TUNE_ITERS", 3)))
 
 
 if __name__ == "__main__":

@@ -24,8 +24,19 @@ Built-in backends:
   kernel_mxu  matrix  Pallas MXU Hamming kernel
   fused       fused   Pallas fused §II-C kernel (Hamming + dual windows +
                       running top-k, one pass over the reference stream)
+  fused_mxu   fused   Pallas fused §II-C kernel on the MXU: the same
+                      single-pass dual-window top-k, with the Hamming tile
+                      computed as a ±1 int8 matmul — bit-identical to
+                      ``fused`` (exact integer math)
   fused_xla   fused   XLA fallback of the fused reduction (still materialises
                       the tile internally; for validation/debug)
+
+Pallas-backed backends resolve their launch tiles through
+``repro.tune.tiles_for`` at dispatch (kernel defaults, overlaid with
+promoted per-device constants, overlaid with any on-disk sweep-winner
+cache) — and the ``peak_intermediate`` contract bounds below are phrased
+through the SAME resolver, so a tuned tile moves the declared bound and
+the launch padding together.
 
 Register custom backends with :func:`register`; kernels are imported lazily
 inside the backend fn so importing this module stays cheap.
@@ -49,16 +60,20 @@ class Backend:
     name: str
     kind: str          # MATRIX | FUSED
     fn: Callable
+    # Matrix backend whose tile fn serves this FUSED backend's prefix/
+    # rescore stages (see hamming_tile_fn); None falls back to "vpu".
+    tile_name: str | None = None
 
 
 _REGISTRY: dict[str, Backend] = {}
 
 
-def register(name: str, kind: str, fn: Callable) -> Backend:
+def register(name: str, kind: str, fn: Callable, *,
+             tile_name: str | None = None) -> Backend:
     if kind not in (MATRIX, FUSED):
         raise ValueError(f"backend kind must be {MATRIX!r} or {FUSED!r}, "
                          f"got {kind!r}")
-    be = Backend(name=name, kind=kind, fn=fn)
+    be = Backend(name=name, kind=kind, fn=fn, tile_name=tile_name)
     _REGISTRY[name] = be
     return be
 
@@ -82,20 +97,44 @@ def names(kind: str | None = None) -> tuple[str, ...]:
 # ---------------------------------------------------------------------------
 
 
+def _tuned(backend: str, dim: int, k: int, q_rows: int, r_rows: int) -> dict:
+    """Effective launch tiles for one hot call (lazy tune import; pure for
+    a fixed loaded winner cache, so repeat dispatch never retraces)."""
+    from repro import tune
+    return tune.tiles_for(backend, dim=dim, k=k, q_rows=q_rows,
+                          r_rows=r_rows)
+
+
 def _kernel_vpu(q, r, dim):
     from repro.kernels.hamming import ops as hops
-    return hops.hamming_matrix(q, r)
+    t = _tuned("kernel_vpu", dim, 0, q.shape[0], r.shape[0])
+    return hops.hamming_matrix(q, r, q_tile=t["q_tile"], r_tile=t["r_tile"],
+                               word_tile=t["word_tile"])
 
 
 def _kernel_mxu(q, r, dim):
     from repro.kernels.hamming_mxu import ops as mops
-    return mops.hamming_matrix(q, r, dim)
+    t = _tuned("kernel_mxu", dim, 0, q.shape[0], r.shape[0])
+    return mops.hamming_matrix(q, r, dim, q_tile=t["q_tile"],
+                               r_tile=t["r_tile"], word_tile=t["word_tile"])
 
 
 def _fused_pallas(q, r, qp, rp, qc, rc, *, dim, ppm_tol, open_tol_da, k):
     from repro.kernels.hamming import ops as hops
+    t = _tuned("fused", dim, k, q.shape[0], r.shape[0])
     return hops.fused_search(q, r, qp, rp, qc, rc, dim=dim, k=k,
-                             ppm_tol=ppm_tol, open_tol_da=open_tol_da)
+                             ppm_tol=ppm_tol, open_tol_da=open_tol_da,
+                             q_tile=t["q_tile"], r_tile=t["r_tile"],
+                             word_tile=t["word_tile"])
+
+
+def _fused_mxu(q, r, qp, rp, qc, rc, *, dim, ppm_tol, open_tol_da, k):
+    from repro.kernels.hamming_mxu import ops as mops
+    t = _tuned("fused_mxu", dim, k, q.shape[0], r.shape[0])
+    return mops.fused_search(q, r, qp, rp, qc, rc, dim=dim, k=k,
+                             ppm_tol=ppm_tol, open_tol_da=open_tol_da,
+                             q_tile=t["q_tile"], r_tile=t["r_tile"],
+                             word_tile=t["word_tile"])
 
 
 def _fused_xla(q, r, qp, rp, qc, rc, *, dim, ppm_tol, open_tol_da, k):
@@ -109,6 +148,7 @@ register("mxu", MATRIX, lambda q, r, dim: packing.hamming_matrix_mxu(q, r, dim))
 register("kernel_vpu", MATRIX, _kernel_vpu)
 register("kernel_mxu", MATRIX, _kernel_mxu)
 register("fused", FUSED, _fused_pallas)
+register("fused_mxu", FUSED, _fused_mxu, tile_name="kernel_mxu")
 register("fused_xla", FUSED, _fused_xla)
 
 
@@ -116,15 +156,19 @@ def hamming_tile_fn(name: str) -> Callable:
     """Plain ``(q_hvs, r_hvs, dim) -> (Qb, Rk) hamming`` tile for ``name``.
 
     The dimension cascade's prefix scan and survivor rescore need a raw
-    Hamming tile at arbitrary word widths. Matrix backends already have that
-    signature; fused backends have no tile entry point (the whole point is
-    not materialising one), so they fall back to the packed-VPU tile for
-    these two stages — the fused single-pass kernel still runs the main
+    Hamming tile at arbitrary word widths. Matrix backends already have
+    that signature; fused backends have no tile entry point (the whole
+    point is not materialising one), so they route these two stages to a
+    matrix sibling: ``fused_mxu`` declares ``tile_name="kernel_mxu"`` (the
+    cascade stages run on the MXU tile kernel), and the rest fall back to
+    the packed-VPU tile — the fused single-pass kernel still runs the main
     full-width scan when the cascade is off.
     """
     be = get(name)
     if be.kind == MATRIX:
         return be.fn
+    if be.tile_name is not None:
+        return get(be.tile_name).fn
     return _REGISTRY["vpu"].fn
 
 
@@ -143,38 +187,63 @@ def _declare_common(target: str) -> None:
 
 
 for _t in ("search:vpu", "search:mxu", "search:kernel_vpu",
-           "search:kernel_mxu", "search:fused", "search:fused_xla"):
+           "search:kernel_mxu", "search:fused", "search:fused_mxu",
+           "search:fused_xla"):
     _declare_common(_t)
 
 # Peak device intermediate of ONE blocked-scan step, as a function of the
 # trace context (q_block, rk = scanned rows, n_words, dim). 4 = the widest
 # per-element carrier on each path (uint32 words / int32 counts). Pallas
 # paths pad Q/Rk up to the kernels' launch tiles before the call, so their
-# bounds are phrased over the PADDED extents (tile constants imported
-# lazily from the kernel wrappers — one source of truth with the kernels).
+# bounds are phrased over the PADDED extents — resolved through the SAME
+# ``repro.tune.tiles_for`` layering the dispatch fns above use (kernel
+# constants < promoted per-device constants < sweep-winner cache), so a
+# tuned tile that changes padding changes the declared bound with it.
 
 
 def _pad_to(n: int, tile: int) -> int:
     return -(-n // tile) * tile
 
 
+def _ctx_tiles(backend: str, c, k: int = 0) -> dict:
+    # The tile fns see dim = 32 * the traced word count (the prefix stage
+    # dispatches at pdim = 32 * prefix_words, not the full HV width).
+    return _tuned(backend, 32 * c["n_words"], k, c["q_block"], c["rk"])
+
+
 def _kernel_vpu_bound(c):
-    from repro.kernels.hamming.ops import Q_TILE, R_TILE
-    rk = _pad_to(c["rk"], R_TILE)
-    return max(_pad_to(c["q_block"], Q_TILE) * rk * 4,
+    t = _ctx_tiles("kernel_vpu", c)
+    rk = _pad_to(c["rk"], t["r_tile"])
+    return max(_pad_to(c["q_block"], t["q_tile"]) * rk * 4,
                rk * c["n_words"] * 4)
 
 
 def _kernel_mxu_bound(c):
-    from repro.kernels.hamming_mxu.ops import Q_TILE, R_TILE
-    rk = _pad_to(c["rk"], R_TILE)
-    return max(_pad_to(c["q_block"], Q_TILE) * rk * 4,
+    from repro.kernels.hamming_mxu.ops import effective_tiles
+    t = _ctx_tiles("kernel_mxu", c)
+    qt, rt, _ = effective_tiles(c["q_block"], c["rk"], c["n_words"],
+                                q_tile=t["q_tile"], r_tile=t["r_tile"],
+                                word_tile=t["word_tile"])
+    rk = _pad_to(c["rk"], rt)
+    return max(_pad_to(c["q_block"], qt) * rk * 4,
                rk * c["n_words"] * 4)
 
 
 def _fused_bound(c):
-    from repro.kernels.hamming.ops import R_TILE
-    return _pad_to(c["rk"], R_TILE) * c["n_words"] * 4
+    t = _ctx_tiles("fused", c, k=c["top_k"])
+    rt = min(t["r_tile"], c["rk"])
+    return max(_pad_to(c["rk"], rt) * c["n_words"] * 4,
+               _pad_to(c["q_block"], t["q_tile"]) * c["n_words"] * 4)
+
+
+def _fused_mxu_bound(c):
+    from repro.kernels.hamming_mxu.ops import effective_tiles
+    t = _ctx_tiles("fused_mxu", c, k=c["top_k"])
+    qt, rt, _ = effective_tiles(c["q_block"], c["rk"], c["n_words"],
+                                q_tile=t["q_tile"], r_tile=t["r_tile"],
+                                word_tile=t["word_tile"])
+    return max(_pad_to(c["rk"], rt) * c["n_words"] * 4,
+               _pad_to(c["q_block"], qt) * c["n_words"] * 4)
 
 
 _declare("search:vpu", "peak_intermediate",
@@ -195,6 +264,10 @@ _declare("search:fused", "peak_intermediate",
          bound=_fused_bound,
          note="§II-C streaming kernel: the (Rk', W) tile-padded reference "
               "slice is the largest HBM-resident array")
+_declare("search:fused_mxu", "peak_intermediate",
+         bound=_fused_mxu_bound,
+         note="§II-C MXU kernel: tile-padded (Rk', W) reference slice; the "
+              "±1 int8 unpack lives in VMEM inside the kernel")
 _declare("search:fused_xla", "peak_intermediate",
          bound=lambda c: c["q_block"] * c["rk"] * c["n_words"] * 4,
          note="XLA fallback materialises the xor tensor like vpu")
@@ -204,8 +277,9 @@ _declare("search:fused_xla", "peak_intermediate",
 # — the scatter target and the (nqb, rk) flag/index carriers are the extra
 # non-tile intermediates); ``rescore:<be>`` is one stage-B exact rescore
 # over an rk = survivor-bucket candidate set at full width. Fused backends
-# route both stages through the packed-VPU tile (see ``hamming_tile_fn``),
-# so their bounds are the VPU bounds.
+# route both stages through their tile sibling (see ``hamming_tile_fn``):
+# fused_mxu runs them on the kernel_mxu tile, the rest fall back to the
+# packed-VPU tile — each declared bound is its tile fn's bound.
 
 
 def _prefix_extra(c):
@@ -236,6 +310,8 @@ for _t, _b, _n in (
     ("prefix:kernel_mxu", _prefix_kernel_mxu_bound,
      "tile-padded Pallas MXU output / padded (Rk', P) copy"),
     ("prefix:fused", _prefix_vpu_bound, "packed-VPU tile fallback"),
+    ("prefix:fused_mxu", _prefix_kernel_mxu_bound,
+     "kernel_mxu tile sibling: tile-padded Pallas MXU output"),
     ("prefix:fused_xla", _prefix_vpu_bound, "packed-VPU tile fallback"),
     ("rescore:vpu", _prefix_vpu_bound, "packed XOR tensor (Qb, S, W)"),
     ("rescore:mxu", _prefix_mxu_bound, "bits_to_pm1 unpack (S, D) int32"),
@@ -244,6 +320,8 @@ for _t, _b, _n in (
     ("rescore:kernel_mxu", _prefix_kernel_mxu_bound,
      "tile-padded Pallas MXU output / padded (S', W) copy"),
     ("rescore:fused", _prefix_vpu_bound, "packed-VPU tile fallback"),
+    ("rescore:fused_mxu", _prefix_kernel_mxu_bound,
+     "kernel_mxu tile sibling: tile-padded Pallas MXU output"),
     ("rescore:fused_xla", _prefix_vpu_bound, "packed-VPU tile fallback"),
 ):
     _declare_common(_t)
@@ -257,6 +335,9 @@ for _t, _b, _n in (
 # validation/debug, and the analyzer reports (rather than fails) it.
 _declare("search:fused", "no_materialize",
          note="single-pass running top-k; tile lives in VMEM")
+_declare("search:fused_mxu", "no_materialize",
+         note="single-pass running top-k; the ±1 unpack and the MXU dot "
+              "tile both live in VMEM")
 _declare("search:fused_xla", "no_materialize", expect=False,
          note="XLA reference reduction materialises the tile internally "
               "by design (validation/debug backend)")

@@ -347,9 +347,13 @@ def plan_seed_rows(row_pmz: np.ndarray, row_charge: np.ndarray,
     return np.flatnonzero(mark).astype(np.int64)
 
 
-def row_bucket(n: int, *, lo: int = 64) -> int:
+def row_bucket(n: int, *, lo: int | None = None) -> int:
     """Power-of-two padding bucket for dynamic candidate-set sizes, so the
-    jitted rescore sees a bounded family of static shapes."""
+    jitted rescore sees a bounded family of static shapes. The floor ``lo``
+    defaults to the tuned per-device base (``repro.tune.row_bucket_lo``)."""
+    if lo is None:
+        from repro import tune
+        lo = tune.row_bucket_lo()
     b = lo
     while b < max(n, 1):
         b <<= 1

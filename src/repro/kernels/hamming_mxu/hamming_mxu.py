@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.topk import merge_topk, select_topk
+
 
 def _unpack_pm1(words: jax.Array) -> jax.Array:
     """(N, wt) uint32 -> (N, wt*32) int8 in {+1, -1} (bit0 -> +1)."""
@@ -81,3 +83,96 @@ def hamming_matrix_mxu_pallas(q, r, *, dim: int, q_tile: int = 128,
         out_shape=jax.ShapeDtypeStruct((Q, R), jnp.int32),
         interpret=interpret,
     )(q, r)
+
+
+# ---------------------------------------------------------------------------
+# Fused dual-window search on the MXU (§II-C kernel, MXU formulation)
+# ---------------------------------------------------------------------------
+#
+# Same structure as repro.kernels.hamming.fused_search_kernel — grid over
+# (q-tile, r-tile), sequential last axis, running top-k winners accumulated
+# under pl.when(j == 0) init — but the Hamming tile comes from the ±1 int8
+# MXU matmul instead of xor+popcount. The dot is exact integer arithmetic,
+# so the winners are bit-identical to the VPU kernel's.
+
+
+def fused_search_mxu_kernel(q_ref, r_ref, qp_ref, rp_ref, qc_ref, rc_ref,
+                            std_sim_ref, std_idx_ref, open_sim_ref,
+                            open_idx_ref, *, dim: int, wt: int, r_tile: int,
+                            k: int, ppm_tol: float, open_tol_da: float,
+                            pad_pmz: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        std_sim_ref[...] = jnp.full_like(std_sim_ref[...], -1)
+        std_idx_ref[...] = jnp.full_like(std_idx_ref[...], -1)
+        open_sim_ref[...] = jnp.full_like(open_sim_ref[...], -1)
+        open_idx_ref[...] = jnp.full_like(open_idx_ref[...], -1)
+
+    dot = _dot_tile(q_ref[...], r_ref[...], wt)
+    sims = dim - (dim - dot) // 2                       # = dim - hamming
+
+    qp = qp_ref[...]
+    rp = rp_ref[...]
+    qc = qc_ref[...]
+    rc = rc_ref[...]
+
+    dpmz = jnp.abs(qp[:, None] - rp[None, :])
+    valid = (rp[None, :] < pad_pmz) & (qc[:, None] == rc[None, :])
+    std_mask = valid & (dpmz <= qp[:, None] * (ppm_tol * 1e-6))
+    open_mask = valid & (dpmz <= open_tol_da)
+
+    base = (j * r_tile).astype(jnp.int32)
+
+    def update(mask, sim_out, idx_out):
+        ts, tc = select_topk(jnp.where(mask, sims, jnp.int32(-1)), k)
+        ti = jnp.where(tc >= 0, base + tc, jnp.int32(-1))
+        # running winners first: earlier blocks (lower idx) win sim ties
+        ms, mi = merge_topk(sim_out[...], idx_out[...], ts, ti, k)
+        sim_out[...] = ms
+        idx_out[...] = mi
+
+    update(std_mask, std_sim_ref, std_idx_ref)
+    update(open_mask, open_sim_ref, open_idx_ref)
+
+
+def fused_search_mxu_pallas(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge,
+                            *, dim: int, k: int = 1, ppm_tol: float = 20.0,
+                            open_tol_da: float = 75.0,
+                            q_tile: int = 32, r_tile: int = 256,
+                            word_tile: int = 16, pad_pmz: float | None = None,
+                            interpret: bool = True):
+    """Returns (std_sim, std_idx, open_sim, open_idx), each (Q, k) int32.
+
+    Same contract as ``hamming.fused_search_pallas`` (idx is the row in
+    ``r_hvs`` or -1; rank order (sim desc, row asc); ``k`` static), with
+    the Hamming tile computed on the MXU. Requires dim == 32 * W.
+    """
+    Q, W = q_hvs.shape
+    R = r_hvs.shape[0]
+    if pad_pmz is None:
+        pad_pmz = float(jnp.finfo(jnp.float32).max)
+    grid = (Q // q_tile, R // r_tile)
+
+    kern = functools.partial(
+        fused_search_mxu_kernel, dim=dim, wt=word_tile, r_tile=r_tile, k=k,
+        ppm_tol=ppm_tol, open_tol_da=open_tol_da, pad_pmz=pad_pmz)
+
+    out2d = pl.BlockSpec((q_tile, k), lambda i, j: (i, 0))
+    shapes = [jax.ShapeDtypeStruct((Q, k), jnp.int32)] * 4
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_tile, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((r_tile, W), lambda i, j: (j, 0)),
+            pl.BlockSpec((q_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((r_tile,), lambda i, j: (j,)),
+            pl.BlockSpec((q_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((r_tile,), lambda i, j: (j,)),
+        ],
+        out_specs=[out2d, out2d, out2d, out2d],
+        out_shape=shapes,
+        interpret=interpret,
+    )(q_hvs, r_hvs, q_pmz, r_pmz, q_charge, r_charge)

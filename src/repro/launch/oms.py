@@ -17,6 +17,11 @@ Entry points:
     transfer/dtype/recompile contracts (see ``repro.analysis``); exits
     nonzero on any non-exempt violation. ``--imports`` adds the
     import-graph (cycle / leaf-module) check, ``--json`` dumps the report;
+  * ``tune``    — per-device tile sweep: benchmark the tunable backends
+    across a static tile grid at caller shapes, print the winner table
+    (median wall time, roofline bound, measured-vs-roofline fraction) and
+    persist the winners to the on-disk JSON cache that ``search``/``serve``
+    load via ``--tune-cache`` (or the ``REPRO_TUNE_CACHE`` env var);
   * legacy one-shot (no subcommand): in-memory ingest + search, as before.
 
     PYTHONPATH=src python -m repro.launch.oms build --store /tmp/oms \\
@@ -103,6 +108,30 @@ def _serving_args(ap):
     ap.add_argument("--exhaustive", action="store_true",
                     help="HyperOMS-style full scan (baseline)")
     _prefix_args(ap)
+
+
+def _tune_args(ap):
+    ap.add_argument("--tune-cache", default=None, metavar="PATH",
+                    help="tile-winner cache JSON written by `oms.py tune`; "
+                         "tuned tiles override the kernel defaults at "
+                         "dispatch (env REPRO_TUNE_CACHE works too)")
+
+
+def _apply_tune_cache(args) -> None:
+    if getattr(args, "tune_cache", None):
+        from repro import tune
+        tune.set_cache_path(args.tune_cache)
+
+
+def _tune_stats_line(tag: str) -> None:
+    """One stderr line on whether a configured tune cache was picked up."""
+    from repro import tune
+    st = tune.cache_stats()
+    if st["path"] is None:
+        return
+    print(f"[{tag}] tune-cache {st['path']}: {st['entries']} entries, "
+          f"{st['hits']} hits / {st['misses']} misses at dispatch",
+          file=sys.stderr, flush=True)
 
 
 def _prefix_args(ap):
@@ -242,7 +271,9 @@ def cmd_search(argv) -> None:
     _serving_args(ap)
     _cascade_args(ap)
     _encode_backend_args(ap)
+    _tune_args(ap)
     args = ap.parse_args(argv)
+    _apply_tune_cache(args)
 
     t0 = time.perf_counter()
     pipe = OMSPipeline.from_store(
@@ -260,6 +291,7 @@ def cmd_search(argv) -> None:
         args.refs = pipe.n_targets
     ds = _dataset(args)
     _serve(pipe, ds, args)
+    _tune_stats_line("oms search")
 
 
 def cmd_queries(argv) -> None:
@@ -309,7 +341,9 @@ def cmd_serve(argv) -> None:
     _prefix_args(ap)
     _cascade_args(ap)
     _encode_backend_args(ap)
+    _tune_args(ap)
     args = ap.parse_args(argv)
+    _apply_tune_cache(args)
     if args.cascade and not args.no_stage1 \
             and not args.narrow_tol_da < args.open_tol:
         ap.error(f"--narrow-tol-da {args.narrow_tol_da} must be < --open-tol "
@@ -413,6 +447,7 @@ def cmd_serve(argv) -> None:
         print(f"[oms serve] answered {n} queries in {dt:.2f}s "
               f"({n / max(dt, 1e-9):.0f} q/s, {batcher.n_batches} "
               f"micro-batches{stats}{bad})", file=sys.stderr)
+    _tune_stats_line("oms serve")
 
 
 def cmd_analyze(argv) -> None:
@@ -473,6 +508,75 @@ def cmd_analyze(argv) -> None:
         raise SystemExit(1)
 
 
+def cmd_tune(argv) -> None:
+    """Per-device tile sweep: time every candidate tile assignment of the
+    tunable backends at the given shapes, print the winner table, persist
+    winners to the JSON cache that dispatch loads."""
+    import subprocess
+
+    from repro import tune
+    from repro.tune import sweep
+
+    ap = argparse.ArgumentParser(prog="repro.launch.oms tune")
+    ap.add_argument("--dim", type=int, default=4096, help="HV width (bits)")
+    ap.add_argument("--top-k", type=int, default=1,
+                    help="static k the fused kernels are swept at")
+    ap.add_argument("--q", type=int, default=16,
+                    help="query rows per hot call (q_block-sized)")
+    ap.add_argument("--rows", type=int, default=1024,
+                    help="reference rows per hot call (candidate-block / "
+                         "slab rows)")
+    ap.add_argument("--backends", default=",".join(tune.SWEPT_BACKENDS),
+                    help="comma-separated subset of: "
+                         + ", ".join(tune.SWEPT_BACKENDS))
+    ap.add_argument("--grid", default="default", choices=sorted(sweep.GRIDS),
+                    help="'tiny' is the CI smoke grid")
+    ap.add_argument("--iters", type=int, default=3,
+                    help="timed repeats per candidate (median kept)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache", default=None, metavar="PATH",
+                    help="winner cache JSON to merge into (default: "
+                         "$REPRO_TUNE_CACHE or ./tune_cache.json)")
+    ap.add_argument("--table", default=None, metavar="PATH",
+                    help="also write the winner table here (CI artifact)")
+    ap.add_argument("--full-table", action="store_true",
+                    help="print every swept candidate, not just the winners")
+    args = ap.parse_args(argv)
+
+    swept = [b.strip() for b in args.backends.split(",") if b.strip()]
+    for be in swept:
+        if be not in tune.SWEPT_BACKENDS:
+            ap.error(f"unknown backend {be!r}; tunable: "
+                     + ", ".join(tune.SWEPT_BACKENDS))
+    cache_path = args.cache or tune.cache_path() or "tune_cache.json"
+    try:
+        rev = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip()
+    except Exception:
+        rev = ""
+
+    t0 = time.perf_counter()
+    results = sweep.run_sweeps(swept, dim=args.dim, k=args.top_k,
+                               q_rows=args.q, r_rows=args.rows,
+                               grid=args.grid, iters=args.iters,
+                               seed=args.seed)
+    dt = time.perf_counter() - t0
+    sweep.save_winners(cache_path, results, dim=args.dim, k=args.top_k,
+                       q_rows=args.q, r_rows=args.rows, git_rev=rev)
+
+    n_cand = sum(len(r) for r in results.values())
+    table = sweep.format_table(results, winners_only=not args.full_table)
+    print(table)
+    if args.table:
+        with open(args.table, "w") as f:
+            f.write(table + "\n")
+    print(f"[oms tune] device={tune.device_kind()} dim={args.dim} "
+          f"k={args.top_k} q={args.q} rows={args.rows} grid={args.grid}: "
+          f"{n_cand} candidates over {len(swept)} backends in {dt:.1f}s; "
+          f"winners -> {cache_path}", file=sys.stderr)
+
+
 def cmd_oneshot(argv) -> None:
     ap = argparse.ArgumentParser(prog="repro.launch.oms")
     _encoding_args(ap)
@@ -511,6 +615,8 @@ def main(argv=None):
         cmd_queries(argv[1:])
     elif argv and argv[0] == "analyze":
         cmd_analyze(argv[1:])
+    elif argv and argv[0] == "tune":
+        cmd_tune(argv[1:])
     else:
         cmd_oneshot(argv)
 

@@ -1,0 +1,33 @@
+"""Per-device PROMOTED tile constants (stdlib-only).
+
+The on-disk winner cache (``repro.tune.cache``) is the machine-local
+tier: whatever ``oms.py tune`` measured on THIS box. This module is the
+reviewed, committed tier: a sweep winner that should ship for everyone on
+a device kind gets promoted here (and thereby into the
+``peak_intermediate`` contract bounds — ``repro.core.backends`` phrases
+its bounds through ``repro.tune.tiles_for``, which layers
+``kernel defaults < PROMOTED < cache``). Promotion is how a tile change
+stays machine-checked by ``oms.py analyze`` instead of loosening any
+contract: the bound moves because the declared constant moved, visibly,
+in this file.
+
+To promote: run ``oms.py tune`` on the target device, copy the winner row
+into :data:`PROMOTED` under ``(device_kind, backend)``, and commit — the
+README's "Autotuning & the MXU backend" section shows the workflow.
+"""
+from __future__ import annotations
+
+# (device_kind, backend) -> partial tiles dict. Keys match the sweep grid:
+# q_tile / r_tile / word_tile for the kernel backends, row_bucket for the
+# "rescore" pseudo-backend. Absent keys fall back to the kernel defaults.
+PROMOTED: dict[tuple[str, str], dict[str, int]] = {
+    # ("TPU v5e", "kernel_mxu"): {"q_tile": 128, "r_tile": 512},
+}
+
+# Fallback pow2 floor for core.search.row_bucket when neither the cache
+# nor PROMOTED names a tuned one.
+DEFAULT_ROW_BUCKET_LO = 64
+
+
+def declared_tiles(device_kind: str, backend: str) -> dict[str, int] | None:
+    return PROMOTED.get((device_kind, backend))

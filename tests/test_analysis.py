@@ -335,8 +335,8 @@ class TestRunnerSmoke:
 
         report = runner.run(with_recompile=False)
         assert report["ok"], runner.summarize(report)
-        # 4 encode x 6 search x 2 path x (cascade on/off + prefix on)
-        assert report["n_combinations"] == 144
+        # 4 encode x 7 search x 2 path x (cascade on/off + prefix on)
+        assert report["n_combinations"] == 168
         assert report["n_checks"] > report["n_combinations"]
         sample = report["combos"][0]
         assert {"encode", "search", "path", "cascade", "prefix",

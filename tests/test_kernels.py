@@ -74,6 +74,49 @@ def test_fused_search_kernel_sweep(Q, R, W, k):
         assert (np.asarray(a) == np.asarray(b)).all(), name
 
 
+@pytest.mark.parametrize("Q,R,W", [(8, 64, 4), (30, 260, 8)])
+@pytest.mark.parametrize("k", [1, 3])
+def test_fused_search_mxu_kernel_sweep(Q, R, W, k):
+    """MXU dot formulation of the fused kernel vs the same XLA oracle —
+    exact integer math, so tie order must match bit-for-bit too."""
+    key = jax.random.PRNGKey(Q + k)
+    ks = jax.random.split(key, 4)
+    q, r = _rand_packed(ks[0], Q, W), _rand_packed(ks[1], R, W)
+    qp = jax.random.uniform(ks[2], (Q,), minval=400, maxval=1800)
+    rp = jax.random.uniform(ks[3], (R,), minval=400, maxval=1800)
+    qc = jnp.where(jnp.arange(Q) % 2 == 0, 2, 3).astype(jnp.int32)
+    rc = jnp.where(jnp.arange(R) % 3 == 0, 3, 2).astype(jnp.int32)
+    o = href.fused_search(q, r, qp, rp, qc, rc, dim=W * 32, k=k)
+    g = mops.fused_search(q, r, qp, rp, qc, rc, dim=W * 32, k=k)
+    for name, a, b in zip(("std_sim", "std_idx", "open_sim", "open_idx"), o, g):
+        assert a.shape == (Q, k), name
+        assert (np.asarray(a) == np.asarray(b)).all(), name
+
+
+def test_mxu_effective_tiles_clamp():
+    """Regression: the old clamp `min(q_tile, Q) if Q >= q_tile else q_tile`
+    always returned q_tile, so small inputs paid full-tile padding. The
+    shared `effective_tiles` must really clamp (and keep word_tile a
+    divisor of W)."""
+    qt, rt, wt = mops.effective_tiles(5, 70, 7)
+    assert qt == 5 and rt == 70
+    assert wt == 7 and 7 % wt == 0
+    qt, rt, wt = mops.effective_tiles(64, 1024, 16)
+    assert (qt, rt, wt) == (mops.Q_TILE, mops.R_TILE, mops.WORD_TILE)
+    # word_tile that doesn't divide W steps down to the largest divisor
+    assert mops.effective_tiles(8, 8, 6, word_tile=4)[2] == 3
+
+
+@pytest.mark.parametrize("Q,R,W", [(3, 5, 2), (1, 1, 1), (7, 130, 3)])
+def test_hamming_mxu_small_shape_clamp(Q, R, W):
+    """Shapes far below the default tiles must still be exact (they now run
+    at clamped launch tiles instead of padding to the full defaults)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(Q * 31 + R))
+    q, r = _rand_packed(k1, Q, W), _rand_packed(k2, R, W)
+    assert (np.asarray(mops.hamming_matrix(q, r, W * 32))
+            == np.asarray(mref.hamming_matrix(q, r, W * 32))).all()
+
+
 @pytest.mark.parametrize("B,P,F,L,W", [
     (4, 10, 50, 8, 4), (23, 40, 500, 16, 8), (16, 64, 100, 32, 2)])
 def test_hdencode_kernel_sweep(B, P, F, L, W):
