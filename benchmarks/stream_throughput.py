@@ -18,6 +18,13 @@ Both claims are measured here on the same store:
 The final row asserts the acceptance property: streaming peak device bytes
 are a function of the slab size, not the library size.
 
+A third measurement covers the serve frontend: the same query workload
+pushed through the :class:`~repro.serve.MicroBatcher` (as ``oms.py
+serve`` runs it), with the scheduler's own deterministic-bucket
+histograms providing the queue-wait and end-to-end p50/p99 columns —
+the latency side of the throughput story, from the exact counters the
+serve heartbeat reports.
+
 Env overrides (CI smoke): ``BENCH_STREAM_REFS`` (csv), ``BENCH_STREAM_DIM``,
 ``BENCH_STREAM_MAXR``, ``BENCH_STREAM_QUERIES``.
 """
@@ -26,6 +33,7 @@ from __future__ import annotations
 import os
 import shutil
 import tempfile
+import time
 
 import jax
 import numpy as np
@@ -35,7 +43,7 @@ from repro.analysis.jaxpr_walk import max_intermediate_bytes
 from repro.core import OMSConfig, OMSPipeline
 from repro.core import search as search_mod
 from repro.data.spectra import LibraryConfig, make_dataset
-from repro.serve import slab_arrays
+from repro.serve import MicroBatcher, QuerySpec, slab_arrays
 
 
 def _leaf_bytes(tree) -> int:
@@ -48,6 +56,42 @@ def _scan_peak_intermediate(db, qh, qp, qc, params, dim) -> int:
         lambda d, a, b, c: search_mod._search_sorted_padded(
             d, a, b, c, params=params, dim=dim))(db, qh, qp, qc)
     return max_intermediate_bytes(jaxpr)
+
+
+def _microbatch_bench(pipe, ds, n_refs: int, n_queries: int) -> None:
+    """Push the query workload through the MicroBatcher (the serve
+    frontend) and report its own queue-wait / e2e latency histograms."""
+    mz = np.asarray(ds.queries.mz)
+    inten = np.asarray(ds.queries.intensity)
+    pmz = np.asarray(ds.queries.pmz)
+    charge = np.asarray(ds.queries.charge)
+    specs = []
+    for i in range(n_queries):
+        keep = inten[i] > 0
+        specs.append(QuerySpec(mz=mz[i][keep], intensity=inten[i][keep],
+                               pmz=float(pmz[i]), charge=int(charge[i])))
+
+    def run_batch(spectra):
+        out = pipe.search(spectra)
+        return list(np.asarray(out.result.open_idx))
+
+    # Warmup round (own batcher, same submission pattern) compiles the
+    # coalesced shapes so the timed round measures steady-state serving.
+    for timed in (False, True):
+        t0 = time.perf_counter()
+        with MicroBatcher(run_batch, max_batch=16, max_wait_s=0.002) as b:
+            for fut in [b.submit(s) for s in specs]:
+                fut.result()
+            dt = time.perf_counter() - t0
+            if timed:
+                qw, e2e = b.queue_wait, b.e2e_latency
+                emit(f"stream/{n_refs}/microbatch", dt / n_queries * 1e6,
+                     f"{n_queries / dt:.0f} sp/s "
+                     f"q_per_batch={b.n_queries / max(b.n_batches, 1):.1f} "
+                     f"wait_p50_us={qw.p50 * 1e6:.0f} "
+                     f"wait_p99_us={qw.p99 * 1e6:.0f} "
+                     f"e2e_p50_us={e2e.p50 * 1e6:.0f} "
+                     f"e2e_p99_us={e2e.p99 * 1e6:.0f}")
 
 
 def main() -> None:
@@ -118,6 +162,7 @@ def main() -> None:
                      f"scanned={s.n_scanned}/{s.n_slabs} slabs "
                      f"scanned_rows={s.scanned_rows} "
                      f"scanned_bytes={s.scanned_bytes}")
+            _microbatch_bench(resident, ds, n_refs, n_queries)
         finally:
             shutil.rmtree(tmp, ignore_errors=True)
 

@@ -21,10 +21,12 @@ Semantics:
     loops), found with Tarjan's algorithm — deterministic order, no
     recursion limits.
 
-Beyond "no cycles anywhere", two named modules must stay import-free of
+Beyond "no cycles anywhere", a few named modules must stay import-free of
 ``repro`` entirely, because other modules import them at module level from
-both sides of a package boundary: ``repro.store.format`` and
-``repro.analysis.registry``.
+both sides of a package boundary: ``repro.store.format``,
+``repro.analysis.registry``, and the observability primitives
+``repro.obs.trace`` / ``repro.obs.metrics`` (imported by both
+``repro.core`` and ``repro.serve``).
 """
 from __future__ import annotations
 
@@ -32,7 +34,8 @@ import ast
 import os
 from typing import Iterable
 
-LEAF_MODULES = ("repro.store.format", "repro.analysis.registry")
+LEAF_MODULES = ("repro.store.format", "repro.analysis.registry",
+                "repro.obs.trace", "repro.obs.metrics")
 
 
 def _module_name(root: str, path: str) -> str:

@@ -18,7 +18,7 @@ Targets are ``"<domain>:<name>"`` strings:
   * ``serve:loop``        — the repeated-call behaviour of the serve loop
                             (recompile_guard runs calls, not traces).
 
-Contract names (the five invariants):
+Contract names (the six invariants):
 
   * ``no_materialize``    — no intermediate carries the full
                             (q-block x scanned-rows) score matrix;
@@ -29,7 +29,12 @@ Contract names (the five invariants):
   * ``dtype_stability``   — no silent 64-bit promotion; packed HVs stay
                             uint32;
   * ``recompile_guard``   — repeated same-shape calls hit the jit cache
-                            (no per-call abstract-signature churn).
+                            (no per-call abstract-signature churn);
+  * ``trace_transparency``— installing a ``repro.obs`` tracer changes
+                            neither the traced hot jaxprs (so no new
+                            host-transfer prims can appear) nor a single
+                            result byte — spans live host-side, strictly
+                            around the jit boundaries.
 
 This module is DEPENDENCY-FREE on purpose (stdlib only): it is imported at
 module level by ``repro.core.backends``/``repro.core.encode_backends``, so
@@ -43,7 +48,7 @@ import dataclasses
 from typing import Any, Callable, Mapping
 
 CONTRACT_NAMES = ("no_materialize", "peak_intermediate", "no_host_transfer",
-                  "dtype_stability", "recompile_guard")
+                  "dtype_stability", "recompile_guard", "trace_transparency")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -268,6 +268,72 @@ def _merge_step_results(fx: _Fixture) -> list[C.ContractResult]:
     return out
 
 
+def _obs_results(fx: _Fixture) -> list[C.ContractResult]:
+    """The ``trace_transparency`` contract: installing a ``repro.obs``
+    tracer must (a) leave the traced hot jaxpr byte-identical — host-side
+    spans cannot inject host-transfer prims into a program they never
+    enter — and (b) change zero result bytes of a real resident AND
+    streamed search. The tracer must also actually record spans during
+    the instrumented calls, or the check would be vacuous."""
+    from repro.obs import trace as trace_mod
+
+    target = "serve:obs"
+    hvs, qp, qc = fx.q
+    base = fx.resident.search_params(fx.qp_np, fx.qc_np)
+
+    def snapshot():
+        outs = []
+        for pipe in (fx.resident, fx.streamed):
+            out = pipe.search_encoded(hvs, qp, qc)
+            outs.append(tuple(np.asarray(a).tobytes()
+                              for a in out.result))
+        return outs
+
+    jaxpr_off = str(_trace_search(fx, fx.resident.db, base))
+    res_off = snapshot()
+    tracer = trace_mod.install(trace_mod.Tracer())
+    try:
+        jaxpr_on = str(_trace_search(fx, fx.resident.db, base))
+        res_on = snapshot()
+    finally:
+        trace_mod.uninstall()
+
+    results = []
+    if jaxpr_on != jaxpr_off:
+        results.append(C.ContractResult(
+            "trace_transparency", target, False,
+            "hot search jaxpr changed with a tracer installed — a span "
+            "leaked inside the traced function"))
+    else:
+        results.append(C.ContractResult(
+            "trace_transparency", target, True,
+            "hot search jaxpr byte-identical with tracer installed"))
+    if res_on != res_off:
+        results.append(C.ContractResult(
+            "trace_transparency", target, False,
+            "search results differ with a tracer installed"))
+    else:
+        results.append(C.ContractResult(
+            "trace_transparency", target, True,
+            "resident+streamed results byte-identical with tracer "
+            "installed"))
+    names = {ev.name for ev in tracer.events()}
+    expected = {"pipeline.plan", "pipeline.scan", "pipeline.fdr",
+                "serve.scan"}
+    missing = expected - names
+    if missing:
+        results.append(C.ContractResult(
+            "trace_transparency", target, False,
+            f"tracer recorded no {sorted(missing)} spans — the "
+            f"transparency check ran against uninstrumented code"))
+    else:
+        results.append(C.ContractResult(
+            "trace_transparency", target, True,
+            f"{tracer.n_recorded} spans recorded across "
+            f"{len(names)} stages"))
+    return results
+
+
 def _recompile_results(fx: _Fixture) -> dict[str, list[C.ContractResult]]:
     """The runtime contract: repeated same-shaped serve calls must be free
     of jit-cache growth. One warmup + one armed call per (backend, path)."""
@@ -321,6 +387,7 @@ def run(sm: SmokeShapes | None = None, *,
         srch = _search_results(fx)
         pref = _prefix_results(fx)
         merge_res = _merge_step_results(fx)
+        obs_res = _obs_results(fx)
         reco = _recompile_results(fx) if with_recompile else {}
     finally:
         fx.close()
@@ -350,6 +417,13 @@ def run(sm: SmokeShapes | None = None, *,
                     "contracts": [r.as_dict() for r in results],
                     "passed": all(r.passed for r in results),
                 })
+
+    combos.append({
+        "encode": "-", "search": "-", "path": "obs",
+        "cascade": False, "prefix": False,
+        "contracts": [r.as_dict() for r in obs_res],
+        "passed": all(r.passed for r in obs_res),
+    })
 
     n_checks = sum(len(c["contracts"]) for c in combos)
     failed = [c for c in combos if not c["passed"]]

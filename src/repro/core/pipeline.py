@@ -40,6 +40,7 @@ from repro.core.search import (SearchParams, SearchResult,
                                narrow_search_params, oms_search, plan_search,
                                scanned_rows)
 from repro.data.spectra import SpectraSet
+from repro.obs.trace import span
 # Only the dependency-free constants at module level: repro.store.library_store
 # imports repro.core, so LibraryStore itself is imported lazily inside the
 # ingest()/from_store() bodies to keep `import repro.store` cycle-free.
@@ -283,10 +284,12 @@ class OMSPipeline:
 
     # ------------------------------------------------------------------
     def encode_queries(self, queries: SpectraSet) -> tuple[jax.Array, jax.Array, jax.Array]:
-        return encode_backends.preprocess_encode(
-            queries.mz, queries.intensity, queries.pmz, queries.charge,
-            self.codebooks, self.cfg.preprocess_params,
-            backend=self.cfg.encode_backend, batch=self.cfg.encode_batch)
+        with span("pipeline.encode", spectra=int(queries.mz.shape[0]),
+                  backend=self.cfg.encode_backend):
+            return encode_backends.preprocess_encode(
+                queries.mz, queries.intensity, queries.pmz, queries.charge,
+                self.codebooks, self.cfg.preprocess_params,
+                backend=self.cfg.encode_backend, batch=self.cfg.encode_batch)
 
     @property
     def _block_meta(self):
@@ -341,14 +344,20 @@ class OMSPipeline:
         # oms_search itself never syncs device->host.
         qp_np = np.asarray(q_pmz)
         qc_np = np.asarray(q_charge)
-        params = self.search_params(qp_np, qc_np, exhaustive=exhaustive,
-                                    open_tol_da=open_tol_da, backend=backend,
-                                    top_k=top_k, prefix_words=prefix_words,
-                                    prefix_margin=prefix_margin)
+        with span("pipeline.plan", queries=int(qp_np.shape[0])):
+            params = self.search_params(qp_np, qc_np, exhaustive=exhaustive,
+                                        open_tol_da=open_tol_da,
+                                        backend=backend, top_k=top_k,
+                                        prefix_words=prefix_words,
+                                        prefix_margin=prefix_margin)
+        scan_span = span("pipeline.scan", backend=params.backend,
+                         path="streamed" if self.engine is not None
+                         else "resident")
         if self.engine is not None:
-            result = self.engine.search_encoded(
-                hvs, q_pmz, q_charge, params, dim=self.cfg.dim,
-                q_pmz_np=qp_np, q_charge_np=qc_np)
+            with scan_span:
+                result = self.engine.search_encoded(
+                    hvs, q_pmz, q_charge, params, dim=self.cfg.dim,
+                    q_pmz_np=qp_np, q_charge_np=qc_np)
             # Decoy flags come from the host layout sidecar — the streamed
             # serve path never uploads library-sized arrays to the device.
             isd_np = self.engine.layout.is_decoy
@@ -364,9 +373,10 @@ class OMSPipeline:
             if params.prefix_words:
                 row_pmz, row_charge, _ = self._host_sidecars
                 row_meta = dict(row_pmz_np=row_pmz, row_charge_np=row_charge)
-            result = oms_search(self.db, hvs, q_pmz, q_charge, params,
-                                dim=self.cfg.dim, q_pmz_np=qp_np,
-                                q_charge_np=qc_np, **row_meta)
+            with scan_span:
+                result = oms_search(self.db, hvs, q_pmz, q_charge, params,
+                                    dim=self.cfg.dim, q_pmz_np=qp_np,
+                                    q_charge_np=qc_np, **row_meta)
 
             def _fdr(row, sim):
                 valid = row >= 0
@@ -375,11 +385,10 @@ class OMSPipeline:
                 return fdr_filter(sim.astype(jnp.float32), isd, valid,
                                   threshold=self.cfg.fdr_threshold)
 
-        return OMSOutput(
-            result=result,
-            open_fdr=_fdr(result.open_row, result.open_sim),
-            std_fdr=_fdr(result.std_row, result.std_sim),
-        )
+        with span("pipeline.fdr"):
+            open_fdr = _fdr(result.open_row, result.open_sim)
+            std_fdr = _fdr(result.std_row, result.std_sim)
+        return OMSOutput(result=result, open_fdr=open_fdr, std_fdr=std_fdr)
 
     # ------------------------------------------------------------------
     # Cascaded narrow→open identification (see repro.core.cascade)
@@ -415,6 +424,8 @@ class OMSPipeline:
         k = self.cfg.top_k if top_k is None else top_k
 
         def run_stage(sel: np.ndarray, *, narrow: bool):
+          with span("pipeline.stage", stage="narrow" if narrow else "open",
+                    queries=int(len(sel))):
             qp_s, qc_s = qp_np[sel], qc_np[sel]
             if narrow:
                 # one plan_search per stage: the base params carry a

@@ -11,6 +11,11 @@ Entry points:
     — the streaming engine scans the store one bounded slab at a time;
   * ``queries`` — emit a synthetic query workload as JSON-lines (pipes into
     ``serve``);
+  * ``trace-report`` — load a trace written by ``serve --trace`` (Chrome
+    ``trace_event`` JSON or JSON-lines), validate it against the export
+    schema, and print the per-stage rollup table (count, total wall time,
+    share, deterministic p50/p95/p99, summed rows/bytes) — the paper's
+    encode/scan/merge stage split reproduced from a real serve session;
   * ``analyze`` — static contract analysis: trace every registered
     (encode backend x search backend x resident/streamed x cascade)
     combination at smoke shapes and machine-check the declared memory/
@@ -59,6 +64,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import threading
 import time
 from collections import deque
 from concurrent.futures import Future
@@ -338,6 +344,18 @@ def cmd_serve(argv) -> None:
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
                     help="max wait after the first queued query before the "
                          "coalesced batch is scanned")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record host-side stage spans and write them here "
+                         "on exit; '.json' suffix -> Chrome/Perfetto "
+                         "trace_event format, anything else -> JSON-lines "
+                         "(inspect either with `oms.py trace-report`)")
+    ap.add_argument("--heartbeat-s", type=float, default=0.0,
+                    help="if > 0, print a one-line serve heartbeat to "
+                         "stderr every this many seconds (answered count, "
+                         "queue depth, wait/e2e percentiles)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the final metrics snapshot JSON here "
+                         "('-' for stderr)")
     _prefix_args(ap)
     _cascade_args(ap)
     _encode_backend_args(ap)
@@ -405,13 +423,35 @@ def cmd_serve(argv) -> None:
         sys.stdout.write(json.dumps({"id": rid, **payload}, sort_keys=True,
                                     separators=(",", ":")) + "\n")
         sys.stdout.flush()
+        state["answered"] += 1
+
+    tracer = None
+    if args.trace:
+        from repro.obs import trace as trace_mod
+        tracer = trace_mod.install(trace_mod.Tracer())
 
     pending: deque = deque()
     n = 0
     n_bad = 0
     t0 = time.perf_counter()
+    state = {"answered": 0}
+    hb_stop = threading.Event()
+
+    def heartbeat():
+        while not hb_stop.wait(args.heartbeat_s):
+            qw, e2e = batcher.queue_wait, batcher.e2e_latency
+            print(f"[oms serve] hb answered={state['answered']} "
+                  f"batches={batcher.n_batches} "
+                  f"depth={int(batcher.queue_depth.value)} "
+                  f"wait_p50={qw.p50 * 1e3:.2f}ms "
+                  f"e2e_p99={e2e.p99 * 1e3:.2f}ms",
+                  file=sys.stderr, flush=True)
+
     with MicroBatcher(run_batch, max_batch=args.max_batch,
                       max_wait_s=args.max_wait_ms / 1e3) as batcher:
+        if args.heartbeat_s > 0:
+            threading.Thread(target=heartbeat, name="oms-heartbeat",
+                             daemon=True).start()
         for line in sys.stdin:
             line = line.strip()
             if not line:
@@ -437,17 +477,67 @@ def cmd_serve(argv) -> None:
         while pending:
             emit(*pending.popleft())
         dt = time.perf_counter() - t0
-        stats = f", {batcher.n_queries / max(batcher.n_batches, 1):.1f} q/batch"
-        if pipe.engine is not None and pipe.engine.last_stats:
-            s = pipe.engine.last_stats
-            stats += (f", last scan {s.n_scanned}/{s.n_slabs} slabs of "
-                      f"{s.slab_rows} rows ({s.scanned_rows} row-reads, "
-                      f"{s.scanned_bytes / 2**20:.2f} MiB)")
+        hb_stop.set()
+        qw, e2e = batcher.queue_wait, batcher.e2e_latency
+        stats = (f", {batcher.n_queries / max(batcher.n_batches, 1):.1f} "
+                 f"q/batch (depth max {int(batcher.queue_depth.max)}), "
+                 f"wait p50/p99 {qw.p50 * 1e3:.2f}/{qw.p99 * 1e3:.2f}ms, "
+                 f"e2e p50/p99 {e2e.p50 * 1e3:.2f}/{e2e.p99 * 1e3:.2f}ms")
+        if pipe.engine is not None and pipe.engine.total_stats.n_scans:
+            ts = pipe.engine.total_stats
+            stats += (f", {ts.n_scans} scans over {ts.slabs_scanned} slabs "
+                      f"({ts.scanned_rows} row-reads, "
+                      f"{ts.scanned_bytes / 2**20:.2f} MiB)")
         bad = f", {n_bad} malformed rejected" if n_bad else ""
         print(f"[oms serve] answered {n} queries in {dt:.2f}s "
               f"({n / max(dt, 1e-9):.0f} q/s, {batcher.n_batches} "
               f"micro-batches{stats}{bad})", file=sys.stderr)
+        if args.metrics:
+            snap = json.dumps(batcher.metrics.snapshot(), sort_keys=True)
+            if args.metrics == "-":
+                print(f"[oms serve] metrics {snap}", file=sys.stderr)
+            else:
+                with open(args.metrics, "w") as f:
+                    f.write(snap + "\n")
+    if tracer is not None:
+        from repro.obs import trace as trace_mod
+        trace_mod.uninstall()
+        if args.trace.endswith(".json"):
+            n_ev = tracer.to_chrome(args.trace)
+        else:
+            n_ev = tracer.to_jsonl(args.trace)
+        dropped = (f" ({tracer.n_dropped} evicted by the ring buffer)"
+                   if tracer.n_dropped else "")
+        print(f"[oms serve] trace: {n_ev} spans -> {args.trace}{dropped}",
+              file=sys.stderr)
     _tune_stats_line("oms serve")
+
+
+def cmd_trace_report(argv) -> None:
+    """Validate a serve trace against the export schema and print the
+    per-stage rollup table (the encode/scan/merge stage split)."""
+    from repro.obs import report as report_mod
+
+    ap = argparse.ArgumentParser(prog="repro.launch.oms trace-report")
+    ap.add_argument("trace", help="trace file from `serve --trace` "
+                                  "(Chrome .json or .jsonl)")
+    ap.add_argument("--json", action="store_true",
+                    help="dump the rollup as JSON instead of the table")
+    args = ap.parse_args(argv)
+
+    try:
+        events = report_mod.load_trace(args.trace)
+    except (OSError, report_mod.TraceFormatError) as e:
+        print(f"[trace-report] invalid trace: {e}", file=sys.stderr)
+        raise SystemExit(1)
+    roll = report_mod.rollup(events)
+    if args.json:
+        json.dump(roll, sys.stdout, indent=2, sort_keys=True)
+        sys.stdout.write("\n")
+    else:
+        print(report_mod.format_table(roll))
+    print(f"[trace-report] {len(events)} spans across {len(roll)} stages "
+          f"in {args.trace}", file=sys.stderr)
 
 
 def cmd_analyze(argv) -> None:
@@ -613,6 +703,8 @@ def main(argv=None):
         cmd_serve(argv[1:])
     elif argv and argv[0] == "queries":
         cmd_queries(argv[1:])
+    elif argv and argv[0] == "trace-report":
+        cmd_trace_report(argv[1:])
     elif argv and argv[0] == "analyze":
         cmd_analyze(argv[1:])
     elif argv and argv[0] == "tune":

@@ -1,0 +1,20 @@
+"""Observability layer: structured tracing + serve metrics.
+
+Zero-overhead-when-disabled spans (``repro.obs.trace``), deterministic
+counters/gauges/latency histograms (``repro.obs.metrics``), and the
+trace-report rollup (``repro.obs.report``). The hot-path seams —
+``OMSPipeline`` stages, ``StreamingEngine`` slabs, ``MicroBatcher``
+queueing — are instrumented host-side around jit boundaries; the
+analyzer's ``trace_transparency`` contract checks that enabling tracing
+changes neither the traced jaxprs nor a single result byte.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, Metrics,
+                               DEFAULT_LATENCY_BUCKETS, DEFAULT_SIZE_BUCKETS)
+from repro.obs.trace import (TraceEvent, Tracer, current, enabled, install,
+                             span, uninstall)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Metrics", "DEFAULT_LATENCY_BUCKETS",
+    "DEFAULT_SIZE_BUCKETS", "TraceEvent", "Tracer", "current", "enabled",
+    "install", "span", "uninstall",
+]

@@ -2,7 +2,7 @@
 near-storage LibraryStore plus an async micro-batching query frontend.
 Entry points: ``OMSPipeline.from_store(..., resident=False)`` and the
 ``repro.launch.oms serve`` JSON-lines loop."""
-from repro.serve.engine import StreamingEngine, StreamStats
+from repro.serve.engine import StreamingEngine, StreamStats, TotalStats
 from repro.serve.scheduler import MicroBatcher, QuerySpec, coalesce_queries
 from repro.serve.slabs import (SlabPlan, StoreLayout, plan_slabs, slab_arrays,
                                slabs_touched)

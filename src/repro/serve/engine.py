@@ -32,6 +32,7 @@ still in ascending slab order.
 """
 from __future__ import annotations
 
+import dataclasses
 from concurrent.futures import ThreadPoolExecutor
 from functools import partial
 from typing import NamedTuple, Sequence
@@ -41,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.registry import contract, declare
+from repro.obs.trace import span
 from repro.core.search import (SearchParams, SearchResult, _NEG_THRESHOLD,
                                _prefix_flags, _rescore_rows_padded,
                                _search_sorted_padded, kth_thresholds,
@@ -67,6 +69,27 @@ class StreamStats(NamedTuple):
     slab_rows: int          # rows per slab (the device-memory bound)
     scanned_rows: int = 0   # store row-reads (seed + scan + rescore)
     scanned_bytes: int = 0  # packed-HV bytes those reads pulled
+
+
+@dataclasses.dataclass
+class TotalStats:
+    """Cumulative scan accounting across ``search_encoded`` calls.
+
+    ``last_stats`` is clobbered per call; this accumulates, so the serve
+    loop's end-of-session summary and a benchmark's per-phase deltas can
+    both read totals without stepping on each other. ``StreamingEngine.
+    reset_stats()`` zeroes it (and clears ``last_stats``)."""
+
+    n_scans: int = 0         # search_encoded calls that reached the slab loop
+    slabs_scanned: int = 0   # slabs streamed, summed over calls
+    scanned_rows: int = 0    # store row-reads, summed
+    scanned_bytes: int = 0   # packed-HV bytes read, summed
+
+    def add(self, st: StreamStats) -> None:
+        self.n_scans += 1
+        self.slabs_scanned += st.n_scanned
+        self.scanned_rows += st.scanned_rows
+        self.scanned_bytes += st.scanned_bytes
 
 
 # The slab step — the capped _search_sorted_padded call plus the offset/
@@ -106,6 +129,14 @@ def _merge_partials(run, part, k: int):
 declare("serve:loop", "recompile_guard",
         note="steady-state serving must not re-trace/re-compile per call")
 
+# The observability contract: the spans instrumenting this engine (and the
+# pipeline stages above it) are host-side, strictly around the jit
+# boundaries — installing a repro.obs tracer must leave every hot jaxpr
+# byte-identical and change zero result bytes. The analyzer traces and
+# runs the real search with and without a tracer installed and diffs both.
+declare("serve:obs", "trace_transparency",
+        note="tracing must not alter jaxprs or result bytes")
+
 
 class StreamingEngine:
     """Executes OMS over a :class:`~repro.store.LibraryStore` (or a
@@ -126,6 +157,16 @@ class StreamingEngine:
         self.devices = list(devices) if devices else None
         self._prefetch = prefetch
         self.last_stats: StreamStats | None = None
+        self.total_stats = TotalStats()
+
+    def _set_stats(self, st: StreamStats) -> None:
+        self.last_stats = st
+        self.total_stats.add(st)
+
+    def reset_stats(self) -> None:
+        """Zero the cumulative totals and clear the per-call snapshot."""
+        self.last_stats = None
+        self.total_stats = TotalStats()
 
     # ------------------------------------------------------------------
     def _device_for(self, j: int):
@@ -173,11 +214,16 @@ class StreamingEngine:
                                       q_charge_np=qc_np)
         qh, qp, qc = q_hvs[gather], q_pmz[gather], q_charge[gather]
 
-        if params.prefix_words:
-            run = self._scan_prefix(touched, qh, qp, qc, params, dim,
-                                    qp_np, qc_np)
-        else:
-            run = self._scan_full(touched, qh, qp, qc, params, dim)
+        with span("serve.scan", queries=Q, slabs=len(touched),
+                  mode="prefix" if params.prefix_words else "full") as sp:
+            if params.prefix_words:
+                run = self._scan_prefix(touched, qh, qp, qc, params, dim,
+                                        qp_np, qc_np)
+            else:
+                run = self._scan_full(touched, qh, qp, qc, params, dim)
+            st = self.last_stats
+            if st is not None:
+                sp.add(rows=st.scanned_rows, bytes=st.scanned_bytes)
 
         if run is None:          # no slab intersects any query window
             z = np.full((Q, K), -1, np.int32)
@@ -210,8 +256,9 @@ class StreamingEngine:
             nxt = (pool.submit(slab_arrays, self.layout, touched[0], self.plan)
                    if pool else None)
             for j, s in enumerate(touched):
-                db_np = nxt.result() if nxt else slab_arrays(
-                    self.layout, s, self.plan)
+                with span("serve.slab.fetch", slab=s):
+                    db_np = nxt.result() if nxt else slab_arrays(
+                        self.layout, s, self.plan)
                 if pool and j + 1 < len(touched):
                     # double buffer: gather slab j+1 from the mmapped shards
                     # while the device searches slab j
@@ -219,24 +266,31 @@ class StreamingEngine:
                                       touched[j + 1], self.plan)
                 else:
                     nxt = None
-                rows_read += self._slab_real_rows(s)
-                dev = self._device_for(j)
-                db_dev = (jax.device_put(db_np, dev) if dev is not None
-                          else jax.device_put(db_np))
-                qh_d, qp_d, qc_d = self._queries_on(qcache, dev, qh, qp, qc)
-                out = _search_sorted_padded(db_dev, qh_d, qp_d, qc_d,
-                                            params=local, dim=dim)
-                part = _offset_rows(*out, np.int32(s * self.plan.slab_rows))
-                if merge_dev is not None:
-                    part = jax.device_put(part, merge_dev)
-                run = part if run is None else _merge_partials(run, part, K)
+                n_real = self._slab_real_rows(s)
+                rows_read += n_real
+                with span("serve.slab.search", slab=s, rows=n_real,
+                          bytes=n_real * W * 4):
+                    dev = self._device_for(j)
+                    db_dev = (jax.device_put(db_np, dev) if dev is not None
+                              else jax.device_put(db_np))
+                    qh_d, qp_d, qc_d = self._queries_on(qcache, dev,
+                                                        qh, qp, qc)
+                    out = _search_sorted_padded(db_dev, qh_d, qp_d, qc_d,
+                                                params=local, dim=dim)
+                with span("serve.slab.merge", slab=s):
+                    part = _offset_rows(*out,
+                                        np.int32(s * self.plan.slab_rows))
+                    if merge_dev is not None:
+                        part = jax.device_put(part, merge_dev)
+                    run = (part if run is None
+                           else _merge_partials(run, part, K))
         finally:
             if pool:
                 pool.shutdown(wait=False)
-        self.last_stats = StreamStats(self.plan.n_slabs, len(touched),
-                                      self.plan.slab_rows,
-                                      scanned_rows=rows_read,
-                                      scanned_bytes=rows_read * W * 4)
+        self._set_stats(StreamStats(self.plan.n_slabs, len(touched),
+                                    self.plan.slab_rows,
+                                    scanned_rows=rows_read,
+                                    scanned_bytes=rows_read * W * 4))
         return run
 
     def _scan_prefix(self, touched, qh, qp, qc, params: SearchParams,
@@ -272,7 +326,9 @@ class StreamingEngine:
         seed_rows = plan_seed_rows(self.layout.pmz, self.layout.charge,
                                    qp_np, qc_np, p.prefix_seed_da)
         if seed_rows.size:
-            thr_std, thr_open = kth_thresholds(rescore(seed_rows), K)
+            with span("serve.seed", rows=int(seed_rows.size),
+                      bytes=int(seed_rows.size) * W * 4):
+                thr_std, thr_open = kth_thresholds(rescore(seed_rows), K)
             rows_read += seed_rows.size
             bytes_read += seed_rows.size * W * 4
         else:
@@ -286,8 +342,9 @@ class StreamingEngine:
             nxt = (pool.submit(slab_p, self.layout, touched[0], self.plan)
                    if pool else None)
             for j, s in enumerate(touched):
-                db_np = nxt.result() if nxt else slab_p(
-                    self.layout, s, self.plan)
+                with span("serve.slab.fetch", slab=s):
+                    db_np = nxt.result() if nxt else slab_p(
+                        self.layout, s, self.plan)
                 if pool and j + 1 < len(touched):
                     nxt = pool.submit(slab_p, self.layout, touched[j + 1],
                                       self.plan)
@@ -296,23 +353,30 @@ class StreamingEngine:
                 n_real = self._slab_real_rows(s)
                 rows_read += n_real
                 bytes_read += n_real * P * 4
-                if run is not None:
-                    # Tighten with the running k-th — still a subset k-th,
-                    # so the exact-mode guarantee is untouched.
-                    rs, ro = kth_thresholds(run, K)
-                    ts, to = jnp.maximum(thr_std, rs), jnp.maximum(thr_open, ro)
-                else:
-                    ts, to = thr_std, thr_open
-                flags = _prefix_flags(jax.device_put(db_np), qh[:, :P],
-                                      qp, qc, ts, to, params=local, dim=dim)
-                surv = np.flatnonzero(np.asarray(flags))
+                with span("serve.slab.search", slab=s, rows=n_real,
+                          bytes=n_real * P * 4):
+                    if run is not None:
+                        # Tighten with the running k-th — still a subset
+                        # k-th, so the exact-mode guarantee is untouched.
+                        rs, ro = kth_thresholds(run, K)
+                        ts = jnp.maximum(thr_std, rs)
+                        to = jnp.maximum(thr_open, ro)
+                    else:
+                        ts, to = thr_std, thr_open
+                    flags = _prefix_flags(jax.device_put(db_np), qh[:, :P],
+                                          qp, qc, ts, to, params=local,
+                                          dim=dim)
+                    surv = np.flatnonzero(np.asarray(flags))
                 if surv.size == 0:
                     continue
                 surv_global = surv + s * self.plan.slab_rows
                 rows_read += surv.size
                 bytes_read += surv.size * W * 4
-                part = rescore(surv_global)
-                run = part if run is None else _merge_partials(run, part, K)
+                with span("serve.slab.merge", slab=s,
+                          rows=int(surv.size), bytes=int(surv.size) * W * 4):
+                    part = rescore(surv_global)
+                    run = (part if run is None
+                           else _merge_partials(run, part, K))
         finally:
             if pool:
                 pool.shutdown(wait=False)
@@ -326,10 +390,10 @@ class StreamingEngine:
             part = rescore(seed_rows)
             run = part if run is None else _merge_partials(run, part, K)
 
-        self.last_stats = StreamStats(self.plan.n_slabs, len(touched),
-                                      self.plan.slab_rows,
-                                      scanned_rows=rows_read,
-                                      scanned_bytes=bytes_read)
+        self._set_stats(StreamStats(self.plan.n_slabs, len(touched),
+                                    self.plan.slab_rows,
+                                    scanned_rows=rows_read,
+                                    scanned_bytes=bytes_read))
         return run
 
     def _finalize(self, best, row, min_sim):

@@ -25,6 +25,8 @@ from typing import Any, Callable, Sequence
 import numpy as np
 
 from repro.data.spectra import SpectraSet
+from repro.obs.metrics import DEFAULT_SIZE_BUCKETS, Metrics
+from repro.obs.trace import span
 
 
 @dataclasses.dataclass
@@ -69,10 +71,24 @@ class MicroBatcher:
     ``run_batch(spectra: SpectraSet) -> Sequence[payload]`` must return one
     payload per batch row; each :meth:`submit` future resolves to its row's
     payload (or to the batch's exception).
+
+    Metrics (a :class:`repro.obs.Metrics` registry, own or shared via the
+    ``metrics`` argument):
+
+      * ``queue_wait_s``   — histogram: submit -> batch-dispatch wait per
+        request (how long coalescing held the query);
+      * ``e2e_latency_s``  — histogram: submit -> future-resolution latency
+        per request, observed exactly once per future — including futures
+        the caller cancelled and batches that errored;
+      * ``batch_size``     — histogram: coalesced requests per dispatched
+        batch (``close()`` flushes the final partial batch's observation);
+      * ``queue_depth``    — gauge: requests enqueued but not yet pulled
+        into a batch (``.max`` is the session high-water mark).
     """
 
     def __init__(self, run_batch: Callable[[SpectraSet], Sequence[Any]], *,
-                 max_batch: int = 64, max_wait_s: float = 0.005):
+                 max_batch: int = 64, max_wait_s: float = 0.005,
+                 metrics: Metrics | None = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self._run_batch = run_batch
@@ -85,6 +101,12 @@ class MicroBatcher:
         self._submit_lock = threading.Lock()
         self.n_batches = 0
         self.n_queries = 0
+        self.metrics = metrics if metrics is not None else Metrics()
+        self.queue_wait = self.metrics.histogram("queue_wait_s")
+        self.e2e_latency = self.metrics.histogram("e2e_latency_s")
+        self.batch_sizes = self.metrics.histogram("batch_size",
+                                                  DEFAULT_SIZE_BUCKETS)
+        self.queue_depth = self.metrics.gauge("queue_depth")
         self._thread = threading.Thread(target=self._worker,
                                         name="oms-microbatch", daemon=True)
         self._thread.start()
@@ -95,7 +117,8 @@ class MicroBatcher:
         with self._submit_lock:
             if self._closed:
                 raise RuntimeError("MicroBatcher is closed")
-            self._queue.put((spec, fut))
+            self.queue_depth.inc()
+            self._queue.put((spec, fut, time.monotonic()))
         return fut
 
     def close(self) -> None:
@@ -118,6 +141,7 @@ class MicroBatcher:
             item = self._queue.get()
             if item is _CLOSE:
                 return
+            self.queue_depth.dec()
             batch = [item]
             deadline = time.monotonic() + self._max_wait
             saw_close = False
@@ -132,16 +156,20 @@ class MicroBatcher:
                 if nxt is _CLOSE:
                     saw_close = True
                     break
+                self.queue_depth.dec()
                 batch.append(nxt)
             self._dispatch(batch)
             if saw_close:
                 return
 
-    @staticmethod
-    def _resolve(fut: Future, *, result=None, error=None) -> None:
-        # A caller may cancel its future at any point; losing that race must
-        # not kill the worker thread (set_result on a cancelled future
+    def _resolve(self, fut: Future, t_submit: float, *,
+                 result=None, error=None) -> None:
+        # The end-to-end latency observation happens HERE, exactly once per
+        # future — before the set attempt, so a future the caller already
+        # cancelled still records its latency (and losing that race must
+        # not kill the worker thread: set_result on a cancelled future
         # raises InvalidStateError).
+        self.e2e_latency.observe(time.monotonic() - t_submit)
         try:
             if error is not None:
                 fut.set_exception(error)
@@ -151,19 +179,25 @@ class MicroBatcher:
             pass
 
     def _dispatch(self, batch) -> None:
-        specs = [spec for spec, _ in batch]
-        futures = [fut for _, fut in batch]
+        t0 = time.monotonic()
+        specs = [spec for spec, _, _ in batch]
+        futures = [fut for _, fut, _ in batch]
+        submits = [t for _, _, t in batch]
+        self.batch_sizes.observe(len(batch))
+        for t in submits:
+            self.queue_wait.observe(t0 - t)
         try:
-            results = self._run_batch(coalesce_queries(specs))
+            with span("serve.batch", n=len(batch)):
+                results = self._run_batch(coalesce_queries(specs))
             if len(results) != len(batch):
                 raise RuntimeError(
                     f"run_batch returned {len(results)} results for a "
                     f"{len(batch)}-query batch")
         except BaseException as e:
-            for fut in futures:
-                self._resolve(fut, error=e)
+            for fut, t in zip(futures, submits):
+                self._resolve(fut, t, error=e)
             return
         self.n_batches += 1
         self.n_queries += len(batch)
-        for fut, res in zip(futures, results):
-            self._resolve(fut, result=res)
+        for (fut, t), res in zip(zip(futures, submits), results):
+            self._resolve(fut, t, result=res)

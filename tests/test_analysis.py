@@ -335,10 +335,15 @@ class TestRunnerSmoke:
 
         report = runner.run(with_recompile=False)
         assert report["ok"], runner.summarize(report)
-        # 4 encode x 7 search x 2 path x (cascade on/off + prefix on)
-        assert report["n_combinations"] == 168
+        # 4 encode x 7 search x 2 path x (cascade on/off + prefix on),
+        # plus the trace_transparency pass as its own "obs" combo
+        assert report["n_combinations"] == 169
         assert report["n_checks"] > report["n_combinations"]
         sample = report["combos"][0]
         assert {"encode", "search", "path", "cascade", "prefix",
                 "contracts", "passed"} <= set(sample)
         assert any(c["prefix"] for c in report["combos"])
+        (obs,) = [c for c in report["combos"] if c["path"] == "obs"]
+        assert obs["passed"]
+        assert all(r["contract"] == "trace_transparency"
+                   for r in obs["contracts"])

@@ -1,0 +1,250 @@
+"""Observability layer: span fast path, tracer ring buffer, both export
+formats round-tripping through the trace-report loader/validator, the
+deterministic histogram quantiles, and — the contract the analyzer also
+machine-checks — that installing a tracer changes zero result bytes of a
+real search while recording the pipeline stage spans.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import (Counter, Gauge, Histogram, Metrics, Tracer, enabled,
+                       install, span, uninstall)
+from repro.obs import report as report_mod
+from repro.obs import trace as trace_mod
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_tracer():
+    """Every test starts and ends with tracing disabled."""
+    uninstall()
+    yield
+    uninstall()
+
+
+# ---------------------------------------------------------------------------
+# span() fast path + tracer
+# ---------------------------------------------------------------------------
+
+
+def test_span_disabled_is_shared_noop_singleton():
+    assert not enabled()
+    s1, s2 = span("a", x=1), span("b")
+    assert s1 is s2 is trace_mod.NOOP_SPAN     # no allocation when disabled
+    with s1 as s:
+        s.add(ignored=True)                    # all no-ops
+    assert trace_mod.current() is None
+
+
+def test_span_records_name_attrs_and_midspan_add():
+    t = install(Tracer())
+    assert enabled() and trace_mod.current() is t
+    with span("stage", rows=7) as s:
+        s.add(bytes=28)
+    (ev,) = t.events()
+    assert ev.name == "stage"
+    assert ev.attrs == {"rows": 7, "bytes": 28}
+    assert ev.t_end_ns >= ev.t_start_ns
+    assert ev.dur_ns == ev.t_end_ns - ev.t_start_ns
+    assert ev.tid == threading.get_ident()
+    uninstall()
+    with span("after"):
+        pass
+    assert t.n_recorded == 1                   # uninstall really detaches
+
+
+def test_tracer_ring_buffer_bounds_memory():
+    t = Tracer(capacity=4)
+    for i in range(10):
+        t.record(f"e{i}", 0, 1)
+    assert t.n_recorded == 10
+    assert t.n_dropped == 6
+    assert [ev.name for ev in t.events()] == ["e6", "e7", "e8", "e9"]
+    t.clear()
+    assert t.events() == [] and t.n_recorded == 0 and t.n_dropped == 0
+
+
+def test_tracer_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        Tracer(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# Export formats round-trip through the report loader (the CI validator)
+# ---------------------------------------------------------------------------
+
+
+def _sample_tracer() -> Tracer:
+    t = Tracer()
+    t.record("encode", 1_000_000, 3_000_000, {"rows": 5})
+    t.record("scan", 3_000_000, 9_000_000, {"rows": 11, "bytes": 44})
+    t.record("scan", 9_000_000, 10_000_000, {"rows": 1, "bytes": 4})
+    return t
+
+
+@pytest.mark.parametrize("fmt", ["jsonl", "chrome"])
+def test_export_round_trips_through_loader(tmp_path, fmt):
+    t = _sample_tracer()
+    path = str(tmp_path / ("t.jsonl" if fmt == "jsonl" else "t.json"))
+    n = t.to_jsonl(path) if fmt == "jsonl" else t.to_chrome(path)
+    assert n == 3
+    events = report_mod.load_trace(path)
+    assert [ev.name for ev in events] == ["encode", "scan", "scan"]
+    assert events[0].dur_ns == 2_000_000
+    assert events[1].attrs["rows"] == 11
+
+
+def test_chrome_export_is_valid_trace_event_json(tmp_path):
+    path = str(tmp_path / "t.json")
+    _sample_tracer().to_chrome(path)
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["displayTimeUnit"] == "ms"
+    for ev in doc["traceEvents"]:
+        assert ev["ph"] == "X"                 # complete events only
+        assert set(ev) >= {"name", "pid", "tid", "ts", "dur", "args"}
+
+
+@pytest.mark.parametrize("line,msg", [
+    ('{"ts_us": 1, "dur_us": 2, "tid": 3}', "missing 'name'"),
+    ('{"name": "x", "ts_us": 1, "tid": 3}', "missing 'dur_us'"),
+    ('{"name": "x", "ts_us": 1, "dur_us": -2, "tid": 3}', "non-negative"),
+    ('{"name": "", "ts_us": 1, "dur_us": 2, "tid": 3}', "non-empty"),
+    ("not json", "invalid JSON"),
+])
+def test_loader_rejects_malformed_jsonl(tmp_path, line, msg):
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write(line + "\n")
+    with pytest.raises(report_mod.TraceFormatError, match=msg):
+        report_mod.load_trace(path)
+
+
+def test_loader_rejects_malformed_chrome(tmp_path):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as f:
+        json.dump({"traceEvents": [{"name": "x", "ph": "B", "ts": 0,
+                                    "dur": 1, "pid": 1, "tid": 1}]}, f)
+    with pytest.raises(report_mod.TraceFormatError, match="ph='X'"):
+        report_mod.load_trace(path)
+
+
+def test_loader_rejects_empty_file(tmp_path):
+    path = str(tmp_path / "empty.jsonl")
+    open(path, "w").close()
+    with pytest.raises(report_mod.TraceFormatError, match="empty"):
+        report_mod.load_trace(path)
+
+
+def test_rollup_counts_totals_and_summed_attrs(tmp_path):
+    events = _sample_tracer().events()
+    roll = report_mod.rollup(events)
+    assert set(roll) == {"encode", "scan"}
+    assert roll["scan"]["count"] == 2
+    assert roll["scan"]["total_us"] == pytest.approx(7000.0)
+    assert roll["scan"]["rows"] == 12 and roll["scan"]["bytes"] == 48
+    assert roll["encode"]["rows"] == 5 and roll["encode"]["bytes"] == 0
+    # percentiles are static bucket bounds — deterministic
+    assert roll["scan"]["p50_us"] in report_mod._DUR_BUCKETS_US
+    table = report_mod.format_table(roll)
+    assert table.splitlines()[2].startswith("scan")    # widest stage first
+    assert "encode" in table
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+
+def test_counter_and_gauge():
+    c = Counter()
+    c.inc()
+    c.inc(4)
+    assert c.value == 5 and c.snapshot() == 5
+    g = Gauge()
+    g.inc(3)
+    g.dec()
+    assert g.value == 2.0 and g.max == 3.0     # high-water mark survives dec
+    g.set(0.5)
+    assert g.snapshot() == {"value": 0.5, "max": 3.0}
+
+
+def test_histogram_deterministic_quantiles():
+    h = Histogram(bounds=(1.0, 2.0, 4.0))
+    assert h.p50 == 0.0                        # empty -> 0.0 by definition
+    for v in (0.5, 1.5, 3.0, 9.0):
+        h.observe(v)
+    assert h.count == 4 and h.sum == pytest.approx(14.0)
+    # rank math over bucket counts: p50 covers rank 2 -> bound 2.0;
+    # p99 lands in the overflow bucket, reported as the last finite bound
+    assert h.p50 == 2.0
+    assert h.p99 == 4.0
+    assert h.quantile(0.0) == 1.0              # rank clamps to 1
+    snap = h.snapshot()
+    assert snap["buckets"] == {"1.0": 1, "2.0": 1, "4.0": 1, "inf": 1}
+    assert snap["p50"] == 2.0
+
+
+def test_histogram_identical_workloads_identical_percentiles():
+    a, b = Histogram(), Histogram()
+    vals = [10 ** (i % 5 - 4) for i in range(100)]
+    for v in vals:
+        a.observe(v)
+    for v in reversed(vals):                   # arrival order must not matter
+        b.observe(v)
+    sa, sb = a.snapshot(), b.snapshot()
+    assert sa["sum"] == pytest.approx(sb["sum"])  # float-add order wiggles
+    for k in ("count", "buckets", "p50", "p95", "p99"):
+        assert sa[k] == sb[k]
+
+
+def test_histogram_bounds_validation():
+    for bad in ((), (2.0, 1.0), (1.0, 1.0), (1.0, float("inf"))):
+        with pytest.raises(ValueError):
+            Histogram(bounds=bad)
+    with pytest.raises(ValueError, match="q must be"):
+        Histogram().quantile(1.5)
+
+
+def test_metrics_registry_get_or_create_and_kind_mismatch():
+    m = Metrics()
+    assert m.counter("a") is m.counter("a")
+    assert m.histogram("h") is m.histogram("h")
+    with pytest.raises(TypeError, match="already registered"):
+        m.gauge("a")
+    m.counter("a").inc()
+    m.gauge("g").set(2.0)
+    snap = m.snapshot()
+    assert snap["a"] == 1 and snap["g"]["value"] == 2.0
+    assert snap["h"]["count"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Trace transparency on the real pipeline (the analyzer's contract, in vivo)
+# ---------------------------------------------------------------------------
+
+
+def test_traced_search_byte_identical_and_spans_recorded():
+    from repro.core import OMSConfig, OMSPipeline
+    from repro.data.spectra import LibraryConfig, make_dataset
+
+    cfg = OMSConfig(dim=256, n_levels=8, max_r=32, q_block=8)
+    ds = make_dataset(LibraryConfig(n_refs=200, n_queries=16, seed=7))
+    pipe = OMSPipeline(cfg, ds.refs)
+    hvs, qp, qc = pipe.encode_queries(ds.queries)
+
+    plain = pipe.search_encoded(hvs, qp, qc)
+    t = install(Tracer())
+    try:
+        traced = pipe.search_encoded(hvs, qp, qc)
+    finally:
+        uninstall()
+
+    for f in plain.result._fields:
+        a = np.asarray(getattr(plain.result, f))
+        b = np.asarray(getattr(traced.result, f))
+        assert a.tobytes() == b.tobytes(), f
+    names = {ev.name for ev in t.events()}
+    assert {"pipeline.plan", "pipeline.scan", "pipeline.fdr"} <= names

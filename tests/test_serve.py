@@ -353,6 +353,109 @@ def test_microbatcher_coalescing_independence(setup):
             assert got[q] == base[q], (key, q)
 
 
+def test_microbatcher_cancelled_future_records_latency_once():
+    """A future the caller cancelled still records its e2e latency —
+    exactly once — and so does everyone else in the batch: the histogram
+    count must equal the submit count, cancellations notwithstanding."""
+    import threading
+
+    release = threading.Event()
+
+    def run_batch(spectra):
+        release.wait(10)
+        return list(np.asarray(spectra.pmz))
+
+    with MicroBatcher(run_batch, max_batch=1, max_wait_s=0.0) as mb:
+        doomed = mb.submit(_spec(1.0))
+        assert doomed.cancel()
+        release.set()
+        ok = mb.submit(_spec(7.0))
+        assert ok.result(timeout=30) == pytest.approx(7.0)
+    assert mb.e2e_latency.count == 2          # doomed AND ok, once each
+    assert mb.queue_wait.count == 2
+    assert mb.queue_depth.value == 0
+
+
+def test_microbatcher_error_batch_records_latency():
+    """Batches that error resolve every future with the exception AND
+    still record each request's e2e latency exactly once."""
+    def run_batch(spectra):
+        raise RuntimeError("scan exploded")
+
+    with MicroBatcher(run_batch, max_batch=4, max_wait_s=0.01) as mb:
+        futs = [mb.submit(_spec(float(i))) for i in range(3)]
+        for f in futs:
+            with pytest.raises(RuntimeError, match="scan exploded"):
+                f.result(timeout=30)
+    assert mb.e2e_latency.count == 3
+
+
+def test_microbatcher_close_flushes_partial_batch_metrics():
+    """close() mid-coalesce dispatches the final partial batch, and that
+    batch's metrics (batch_size observation, per-request queue waits and
+    latencies) land before close() returns."""
+    def run_batch(spectra):
+        return list(np.asarray(spectra.pmz))
+
+    # max_wait long enough that the worker is still coalescing when
+    # close() lands: the _CLOSE sentinel must flush, not drop, the batch.
+    with MicroBatcher(run_batch, max_batch=64, max_wait_s=30.0) as mb:
+        futs = [mb.submit(_spec(float(i))) for i in range(3)]
+        mb.close()
+        assert [f.result(timeout=30) for f in futs] == [0.0, 1.0, 2.0]
+    assert mb.n_batches == 1 and mb.n_queries == 3
+    assert mb.batch_sizes.count == 1
+    assert mb.batch_sizes.sum == pytest.approx(3.0)   # the partial batch
+    assert mb.e2e_latency.count == 3
+    assert mb.queue_wait.count == 3
+    assert mb.queue_depth.value == 0
+    assert mb.queue_depth.max >= 3                    # high-water mark
+
+
+def test_microbatcher_shared_metrics_registry():
+    from repro.obs import Metrics
+
+    reg = Metrics()
+    with MicroBatcher(lambda s: list(np.asarray(s.pmz)), max_batch=2,
+                      max_wait_s=0.0, metrics=reg) as mb:
+        assert mb.submit(_spec(5.0)).result(timeout=30) == pytest.approx(5.0)
+    snap = reg.snapshot()
+    assert snap["e2e_latency_s"]["count"] == 1
+    assert snap["batch_size"]["count"] == 1
+    assert snap["queue_depth"]["value"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# StreamingEngine cumulative stats
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_engine_total_stats_accumulate_and_reset(setup):
+    ds, pipe, store, encoded = setup
+    hvs, qp, qc = encoded
+    streamed = OMSPipeline.from_store(store, CFG, resident=False,
+                                      slab_rows=96)
+    eng = streamed.engine
+    assert eng.total_stats.n_scans == 0
+
+    streamed.search_encoded(hvs, qp, qc)
+    s1 = eng.last_stats
+    assert eng.total_stats.n_scans == 1
+    assert eng.total_stats.scanned_rows == s1.scanned_rows
+    assert eng.total_stats.scanned_bytes == s1.scanned_bytes
+    assert eng.total_stats.slabs_scanned == s1.n_scanned
+
+    streamed.search_encoded(hvs, qp, qc)      # last_stats clobbers, totals add
+    assert eng.last_stats.scanned_rows == s1.scanned_rows
+    assert eng.total_stats.n_scans == 2
+    assert eng.total_stats.scanned_rows == 2 * s1.scanned_rows
+    assert eng.total_stats.slabs_scanned == 2 * s1.n_scanned
+
+    eng.reset_stats()
+    assert eng.last_stats is None
+    assert eng.total_stats.n_scans == 0 and eng.total_stats.scanned_rows == 0
+
+
 def test_coalesce_pads_variable_peak_lists():
     batch = coalesce_queries([_spec(10.0, n_peaks=2), _spec(20.0, n_peaks=5)])
     assert batch.mz.shape == (2, 5)
