@@ -27,6 +27,7 @@ MODULES = [
     ("ingest", "benchmarks.ingest_throughput"),
     ("stream", "benchmarks.stream_throughput"),
     ("cascade", "benchmarks.cascade_throughput"),
+    ("serve_slo", "benchmarks.serve_slo"),
     ("dimension", "benchmarks.dimension_cascade"),
     ("encode", "benchmarks.encode_throughput"),
     ("energy", "benchmarks.energy_model"),

@@ -24,9 +24,14 @@ merged result set mixes a "standard" population (|Δpmz| ≤ narrow tol) with
 an "open" (mass-shifted) one, and a pooled competition would let the strong
 standard matches absorb the open population's decoys — per-subgroup
 q-values keep the cascade's FDR calibrated, as ANN-Solo-style cascades
-require. Stage-1 identification itself is a plain target-decoy filter over
-the narrow matches: a query is identified when its rank-0 match is accepted
-at ``fdr_threshold``.
+require. Stage-1 identification itself is a target-decoy filter over the
+narrow matches: a query is identified when its rank-0 match is accepted at
+``fdr_threshold``. The competition pool is selectable: batch-level (the
+offline default — calibrated over the whole corpus being searched) or
+**per query** (``CascadeParams.stage1_per_query``, the serve mode — each
+query competes only against its own top-k narrow matches, so the decision
+is independent of micro-batch composition and coalescing cannot change an
+answer).
 """
 from __future__ import annotations
 
@@ -35,7 +40,8 @@ from typing import Any, Callable, NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fdr import FDRResult, fdr_filter, fdr_filter_grouped
+from repro.core.fdr import (FDRResult, fdr_filter, fdr_filter_grouped,
+                            fdr_filter_per_query)
 from repro.core.search import SearchResult
 
 
@@ -47,6 +53,10 @@ class CascadeParams(NamedTuple):
     fdr_threshold: float = 0.01  # stage-1 identification + final filtering
     run_stage1: bool = True      # False = pure open search via the cascade
     #                              path (must be bit-identical to oms_search)
+    stage1_per_query: bool = False  # gate stage 1 per query (serve mode):
+    #                              each query's identification depends only
+    #                              on its own narrow matches, so coalescing
+    #                              micro-batches cannot change any answer
 
 
 class StageOutput(NamedTuple):
@@ -106,11 +116,13 @@ def row_match_flags(row, is_decoy_np: np.ndarray, n_rows: int):
     return valid, isd
 
 
-def _stage_fdr(result: SearchResult, is_decoy_np, n_rows, threshold) -> FDRResult:
+def _stage_fdr(result: SearchResult, is_decoy_np, n_rows, threshold, *,
+               per_query: bool = False) -> FDRResult:
     valid, isd = row_match_flags(result.open_row, is_decoy_np, n_rows)
-    return fdr_filter(jnp.asarray(np.asarray(result.open_sim)).astype(jnp.float32),
-                      jnp.asarray(isd), jnp.asarray(valid),
-                      threshold=threshold)
+    filt = fdr_filter_per_query if per_query else fdr_filter
+    return filt(jnp.asarray(np.asarray(result.open_sim)).astype(jnp.float32),
+                jnp.asarray(isd), jnp.asarray(valid),
+                threshold=threshold)
 
 
 def cascade_search(run_stage: RunStage, q_pmz_np: np.ndarray, *, top_k: int,
@@ -140,7 +152,8 @@ def cascade_search(run_stage: RunStage, q_pmz_np: np.ndarray, *, top_k: int,
     if params.run_stage1:
         all_idx = np.arange(Q, dtype=np.int32)
         res1, scanned1, stats1 = run_stage(all_idx, narrow=True)
-        fdr1 = _stage_fdr(res1, row_is_decoy, n_rows, params.fdr_threshold)
+        fdr1 = _stage_fdr(res1, row_is_decoy, n_rows, params.fdr_threshold,
+                          per_query=params.stage1_per_query)
         accept1 = np.asarray(fdr1.accept)
         # A query is identified at stage 1 when its best (rank-0) narrow
         # match clears the FDR threshold; everyone else falls through.

@@ -96,6 +96,33 @@ def fdr_filter(scores: jax.Array, is_decoy: jax.Array, valid: jax.Array,
                      n_accepted=jnp.sum(accept, dtype=jnp.int32))
 
 
+def fdr_filter_per_query(scores: jax.Array, is_decoy: jax.Array,
+                         valid: jax.Array,
+                         threshold: float = 0.01) -> FDRResult:
+    """Batch-independent target-decoy filtering: the competition runs over
+    each query's OWN (k,) top-k match list, never across queries.
+
+    A serve loop that coalesces arbitrary micro-batches needs its
+    accept/reject decisions to depend only on the query itself — the pooled
+    competition of :func:`fdr_filter` lets batchmates shift each other's
+    q-values, which would make coalescing change answers. Per-query
+    competition (decoy-vs-target within the query's own ranked matches; for
+    top-1 this reduces to "identified iff the best match is a valid
+    target") is the decision rule with that independence by construction.
+
+    ``scores``/``is_decoy``/``valid`` must be (Q, k); returns the same
+    shapes as :func:`fdr_filter`.
+    """
+    _validate_threshold(threshold)
+    if scores.ndim != 2:
+        raise ValueError(
+            f"fdr_filter_per_query needs (Q, k) matches, got {scores.shape}")
+    q = jax.vmap(compute_q_values)(scores, is_decoy, valid)
+    accept = valid & (~is_decoy) & (q <= threshold)
+    return FDRResult(accept=accept, q_values=q,
+                     n_accepted=jnp.sum(accept, dtype=jnp.int32))
+
+
 def fdr_filter_grouped(scores: jax.Array, is_decoy: jax.Array,
                        valid: jax.Array, in_narrow: jax.Array,
                        threshold: float = 0.01) -> FDRResult:

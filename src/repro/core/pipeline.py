@@ -282,6 +282,28 @@ class OMSPipeline:
                                           devices=stream_devices)
         return self
 
+    def reload_store(self, store) -> None:
+        """Hot-reload a grown (append-only) store into a streaming pipeline.
+
+        Re-plans the engine's layout/slabs over the new shard set (atomic
+        swap — in-flight scans finish on their entry snapshot) and drops
+        the host sidecar cache so cascade FDR grouping and seed planning see
+        the grown library. Callers that interleave searches with reloads
+        (the serve loop) must invoke this from the thread that runs the
+        searches, so a single batch never mixes old sidecars with a new
+        layout. Bit-identical to a cold start on the grown store."""
+        from repro.store import LibraryStore
+        if self.engine is None:
+            raise RuntimeError(
+                "reload_store needs the streaming path (resident=False): "
+                "a resident DB cannot grow in place")
+        if not isinstance(store, LibraryStore):
+            store = LibraryStore.open(os.fspath(store))
+        store.check_config(self.cfg)
+        self.engine.reload(store)
+        self.n_targets = store.n_targets
+        self._host_sidecars_cache = None
+
     # ------------------------------------------------------------------
     def encode_queries(self, queries: SpectraSet) -> tuple[jax.Array, jax.Array, jax.Array]:
         with span("pipeline.encode", spectra=int(queries.mz.shape[0]),
@@ -401,7 +423,8 @@ class OMSPipeline:
                                backend: str | None = None,
                                top_k: int | None = None,
                                prefix_words: int | None = None,
-                               prefix_margin: int | None = None) -> CascadeOutput:
+                               prefix_margin: int | None = None,
+                               stage1_per_query: bool = False) -> CascadeOutput:
         """Two-stage cascade over an encoded query batch: a narrow-window
         pass identifies unmodified spectra at the configured FDR, and only
         the fall-through queries pay for the full open scan. Works on both
@@ -411,6 +434,12 @@ class OMSPipeline:
         With ``run_stage1=False`` the output is bit-identical to
         :meth:`search_encoded`'s pure open search — the cascade's stage 2
         simply runs on every query.
+
+        ``stage1_per_query=True`` gates stage-1 identification per query
+        (see :class:`repro.core.cascade.CascadeParams`) — the serve loop
+        uses it so coalesced micro-batch composition cannot change any
+        query's answer. The offline default keeps the corpus-level
+        competition.
 
         ``prefix_words`` composes the dimension cascade into the open stage
         (stage 2) — the 2x2 of (mass window x dimension) stages. The narrow
@@ -468,7 +497,8 @@ class OMSPipeline:
                 f"({self.cfg.open_tol_da} Da) for the cascade to prune")
         cparams = CascadeParams(narrow_tol_da=narrow_tol_da,
                                 fdr_threshold=self.cfg.fdr_threshold,
-                                run_stage1=run_stage1)
+                                run_stage1=run_stage1,
+                                stage1_per_query=stage1_per_query)
         row_pmz, _, row_isd = self._host_sidecars
         return cascade_search(
             run_stage, qp_np, top_k=k, row_pmz=row_pmz, row_is_decoy=row_isd,
@@ -477,12 +507,13 @@ class OMSPipeline:
     def search_cascade(self, queries: SpectraSet, *,
                        narrow_tol_da: float = 1.0, run_stage1: bool = True,
                        exhaustive: bool = False, backend: str | None = None,
-                       top_k: int | None = None) -> CascadeOutput:
+                       top_k: int | None = None,
+                       stage1_per_query: bool = False) -> CascadeOutput:
         hvs, q_pmz, q_charge = self.encode_queries(queries)
         return self.search_cascade_encoded(
             hvs, q_pmz, q_charge, narrow_tol_da=narrow_tol_da,
             run_stage1=run_stage1, exhaustive=exhaustive, backend=backend,
-            top_k=top_k)
+            top_k=top_k, stage1_per_query=stage1_per_query)
 
     def pure_open_scanned_rows(self, n_queries: int, q_pmz, q_charge, *,
                                exhaustive: bool = False) -> int:

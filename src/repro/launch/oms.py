@@ -47,17 +47,23 @@ match populations separately calibrated). ``--cascade --no-stage1`` must be
 byte-identical to the plain search — that is the CI smoke check.
 
 ``serve`` requests are one JSON object per line:
-``{"id": ..., "pmz": f, "charge": i, "mz": [...], "intensity": [...]}``;
-responses echo the id with the dual-window top-k matches. Responses are
-bit-identical between ``--resident`` and streaming runs, and — without
-``--cascade``, or with ``--cascade --no-stage1`` — independent of
-micro-batch composition (FDR is a corpus-level statistic over a whole
-batch, so it is reported by ``search``, not per request here). With the
-cascade's stage 1 ON, identification gates on target-decoy FDR computed
-over the coalesced batch, so which queries skip the open scan is a
-batch-level decision: statistically meaningful with large ``--max-batch``,
-noise at batch size ~1 (tiny batches have no decoy competition; use
-``search`` for calibrated corpus-level cascades).
+``{"id": ..., "pmz": f, "charge": i, "mz": [...], "intensity": [...]}``
+(optional: ``"deadline_ms"``, ``"tenant"`` — per-request SLO overrides of
+the ``--deadline-ms``/``--tenant`` defaults); responses echo the id with
+the dual-window top-k matches. Responses are bit-identical between
+``--resident`` and streaming runs and independent of micro-batch
+composition — including ``--cascade``: serving gates stage-1
+identification PER QUERY (each query competes only against its own top-k
+narrow matches), so coalescing never changes an answer. Corpus-level FDR
+statistics remain the ``search`` subcommand's job.
+
+``serve`` production knobs: ``--deadline-ms`` sheds requests the queue
+cannot meet (fast-fail with an error response), ``--tenant`` names the
+traffic source for round-robin fair batching, ``--result-cache``/
+``--no-result-cache`` controls the HV-keyed LRU response cache
+(byte-identical hits by construction), and ``--hot-reload S`` polls the
+store manifest every S seconds and re-plans the slab layout over appended
+shards without dropping a single in-flight query.
 """
 from __future__ import annotations
 
@@ -70,6 +76,7 @@ from collections import deque
 from concurrent.futures import Future
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import OMSConfig, OMSPipeline, backends, encode_backends
@@ -356,6 +363,25 @@ def cmd_serve(argv) -> None:
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="write the final metrics snapshot JSON here "
                          "('-' for stderr)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="default per-request latency budget; requests the "
+                         "queue cannot meet are shed with an error response "
+                         "(0 = no deadline; per-request 'deadline_ms' "
+                         "overrides)")
+    ap.add_argument("--tenant", default="default",
+                    help="default tenant label for fair round-robin "
+                         "batching (per-request 'tenant' overrides)")
+    ap.add_argument("--result-cache", type=int, default=4096, metavar="N",
+                    help="HV-keyed LRU result cache capacity (entries); "
+                         "hits are byte-identical to recomputation")
+    ap.add_argument("--no-result-cache", action="store_true",
+                    help="bypass the result cache (the CI byte-identity "
+                         "reference)")
+    ap.add_argument("--hot-reload", type=float, default=0.0, metavar="S",
+                    help="if > 0, poll the store manifest every S seconds "
+                         "and pick up appended shards without a restart "
+                         "(streaming mode only); in-flight queries are "
+                         "never dropped")
     _prefix_args(ap)
     _cascade_args(ap)
     _encode_backend_args(ap)
@@ -366,6 +392,11 @@ def cmd_serve(argv) -> None:
             and not args.narrow_tol_da < args.open_tol:
         ap.error(f"--narrow-tol-da {args.narrow_tol_da} must be < --open-tol "
                  f"{args.open_tol} (fail now, not per micro-batch)")
+    if args.hot_reload > 0 and args.resident:
+        ap.error("--hot-reload needs the streaming path (drop --resident): "
+                 "a device-resident DB cannot grow in place")
+    if args.result_cache < 1:
+        ap.error(f"--result-cache must be >= 1, got {args.result_cache}")
 
     t0 = time.perf_counter()
     pipe = OMSPipeline.from_store(
@@ -389,29 +420,115 @@ def cmd_serve(argv) -> None:
         mode += (f", prefix {args.prefix_words} words"
                  + ("" if args.prefix_margin < 0
                     else f" (margin {args.prefix_margin})"))
+    if args.no_result_cache:
+        mode += ", cache off"
+    else:
+        mode += f", cache {args.result_cache}"
+    if args.deadline_ms > 0:
+        mode += f", deadline {args.deadline_ms}ms"
+    if args.hot_reload > 0:
+        mode += f", hot-reload {args.hot_reload}s"
     print(f"[oms serve] cold-started {args.store} in {t_load:.2f}s — {mode}; "
           f"backend={args.backend} top_k={args.top_k} "
           f"max_batch={args.max_batch} max_wait={args.max_wait_ms}ms",
           file=sys.stderr, flush=True)
 
-    def run_batch(spectra):
-        # Cascade mode keeps the response schema: per-query matches only.
-        # Stage-1 identification gates on FDR over the coalesced batch, so
-        # unlike the plain scan it is a batch-level (not per-query) decision.
-        if args.cascade:
-            out = pipe.search_cascade(spectra,
-                                      narrow_tol_da=args.narrow_tol_da,
-                                      run_stage1=not args.no_stage1)
-        else:
-            out = pipe.search(spectra)
-        r = out.result
+    from repro.obs.metrics import Metrics
+    from repro.serve import ResultCache
+    from repro.store import LibraryStore
+
+    reg = Metrics()
+    cache = (None if args.no_result_cache
+             else ResultCache(args.result_cache, metrics=reg))
+    reloads = reg.counter("hot_reloads")
+    # Everything that could change an answer goes into the cache key token;
+    # the cache is also cleared outright on hot-reload (new library).
+    cache_token = json.dumps(
+        {"backend": args.backend, "top_k": args.top_k,
+         "open_tol": args.open_tol, "max_r": args.max_r,
+         "q_block": args.q_block, "slab": args.slab_rows,
+         "prefix": [args.prefix_words, args.prefix_margin,
+                    args.prefix_seed_da],
+         "cascade": [args.cascade, args.no_stage1, args.narrow_tol_da]},
+        sort_keys=True)
+
+    reload_pending = threading.Event()
+    watch_stop = threading.Event()
+
+    def watch_manifest():
+        seen = LibraryStore.manifest_token(args.store)
+        while not watch_stop.wait(args.hot_reload):
+            try:
+                tok = LibraryStore.manifest_token(args.store)
+            except OSError:
+                continue            # mid-commit rename; next poll sees it
+            if tok != seen:
+                seen = tok
+                reload_pending.set()
+
+    def maybe_reload():
+        # Runs on the batcher worker thread BETWEEN scans, so a swap never
+        # splits a batch: layout, slab plan, sidecars, and cache generation
+        # all change together while zero queries are in the slab loop.
+        if not reload_pending.is_set():
+            return
+        reload_pending.clear()
+        pipe.reload_store(args.store)
+        if cache is not None:
+            cache.clear()
+        reloads.inc()
+        eng = pipe.engine
+        print(f"[oms serve] hot-reload: re-planned "
+              f"{eng.plan.n_slabs} slabs over {eng.layout.n_rows} rows",
+              file=sys.stderr, flush=True)
+
+    def payloads_of(result, n):
+        r = result
         std_i = np.asarray(r.std_idx); std_s = np.asarray(r.std_sim)
         opn_i = np.asarray(r.open_idx); opn_s = np.asarray(r.open_sim)
         return [
             {"std": {"idx": std_i[i].tolist(), "sim": std_s[i].tolist()},
              "open": {"idx": opn_i[i].tolist(), "sim": opn_s[i].tolist()}}
-            for i in range(std_i.shape[0])
+            for i in range(n)
         ]
+
+    def search_subset(hvs, q_pmz, q_charge, sel):
+        # A search restricted to a query subset is bit-identical per query
+        # (the coalescing-independence contract), so cache misses can be
+        # scanned alone without changing any response byte. Cascade serving
+        # gates stage 1 PER QUERY for the same reason — batch composition
+        # must never leak into an answer.
+        sel_j = jnp.asarray(sel)
+        hv_s, qp_s, qc_s = hvs[sel_j], q_pmz[sel_j], q_charge[sel_j]
+        if args.cascade:
+            out = pipe.search_cascade_encoded(
+                hv_s, qp_s, qc_s, narrow_tol_da=args.narrow_tol_da,
+                run_stage1=not args.no_stage1, stage1_per_query=True)
+        else:
+            out = pipe.search_encoded(hv_s, qp_s, qc_s)
+        return payloads_of(out.result, len(sel))
+
+    def run_batch(spectra):
+        maybe_reload()
+        hvs, q_pmz, q_charge = pipe.encode_queries(spectra)
+        B = int(np.asarray(q_pmz).shape[0])
+        if cache is None:
+            return search_subset(hvs, q_pmz, q_charge,
+                                 np.arange(B, dtype=np.int32))
+        hv_np = np.asarray(hvs)
+        qp_np = np.asarray(q_pmz)
+        qc_np = np.asarray(q_charge)
+        keys = [ResultCache.key(hv_np[i], qp_np[i], int(qc_np[i]),
+                                cache_token) for i in range(B)]
+        payloads = [cache.get(k) for k in keys]
+        miss = np.asarray([i for i, p in enumerate(payloads) if p is None],
+                          np.int32)
+        if miss.size:
+            fresh = search_subset(hvs, q_pmz, q_charge, miss)
+            for j, i in enumerate(miss):
+                payloads[i] = fresh[j]
+                cache.put(keys[i], fresh[j])
+        return payloads
 
     def emit(rid, fut):
         # One bad request (or a poisoned micro-batch) answers with an error
@@ -448,9 +565,13 @@ def cmd_serve(argv) -> None:
                   file=sys.stderr, flush=True)
 
     with MicroBatcher(run_batch, max_batch=args.max_batch,
-                      max_wait_s=args.max_wait_ms / 1e3) as batcher:
+                      max_wait_s=args.max_wait_ms / 1e3,
+                      metrics=reg) as batcher:
         if args.heartbeat_s > 0:
             threading.Thread(target=heartbeat, name="oms-heartbeat",
+                             daemon=True).start()
+        if args.hot_reload > 0:
+            threading.Thread(target=watch_manifest, name="oms-hot-reload",
                              daemon=True).start()
         for line in sys.stdin:
             line = line.strip()
@@ -465,7 +586,11 @@ def cmd_serve(argv) -> None:
                                                       np.float32),
                                  pmz=float(req["pmz"]),
                                  charge=int(req["charge"]))
-                fut = batcher.submit(spec)
+                ddl_ms = float(req.get("deadline_ms", args.deadline_ms))
+                fut = batcher.submit(
+                    spec,
+                    deadline_s=ddl_ms / 1e3 if ddl_ms > 0 else None,
+                    tenant=str(req.get("tenant", args.tenant)))
             except Exception as e:      # malformed line: answer, don't die
                 n_bad += 1
                 fut = Future()
@@ -478,6 +603,7 @@ def cmd_serve(argv) -> None:
             emit(*pending.popleft())
         dt = time.perf_counter() - t0
         hb_stop.set()
+        watch_stop.set()
         qw, e2e = batcher.queue_wait, batcher.e2e_latency
         stats = (f", {batcher.n_queries / max(batcher.n_batches, 1):.1f} "
                  f"q/batch (depth max {int(batcher.queue_depth.max)}), "
@@ -488,6 +614,16 @@ def cmd_serve(argv) -> None:
             stats += (f", {ts.n_scans} scans over {ts.slabs_scanned} slabs "
                       f"({ts.scanned_rows} row-reads, "
                       f"{ts.scanned_bytes / 2**20:.2f} MiB)")
+        if cache is not None:
+            stats += (f", cache {cache.hits.value}/"
+                      f"{cache.hits.value + cache.misses.value} hits")
+        n_shed = batcher.shed_admit.value + batcher.shed_expired.value
+        if n_shed:
+            stats += (f", shed {n_shed} "
+                      f"({batcher.shed_admit.value} admit / "
+                      f"{batcher.shed_expired.value} expired)")
+        if reloads.value:
+            stats += f", {reloads.value} hot-reloads"
         bad = f", {n_bad} malformed rejected" if n_bad else ""
         print(f"[oms serve] answered {n} queries in {dt:.2f}s "
               f"({n / max(dt, 1e-9):.0f} q/s, {batcher.n_batches} "

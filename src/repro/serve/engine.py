@@ -29,10 +29,18 @@ With ``devices=[d0, d1, ...]`` the slab stream is dealt round-robin across
 devices (the per-mesh-slab analogue of the paper's multi-SmartSSD scale-
 out); async dispatch overlaps their scans and partials merge on ``d0``,
 still in ascending slab order.
+
+Live library growth: :meth:`StreamingEngine.reload` re-plans the layout and
+slab plan over a grown (append-only) store and swaps them in atomically.
+A ``search_encoded`` call snapshots (layout, plan) once at entry, so an
+in-flight scan finishes on the layout it started with — the old mmapped
+shards stay valid because shard files are never rewritten — while the next
+call sees the grown library, bit-identical to a cold start on it.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from functools import partial
 from typing import NamedTuple, Sequence
@@ -129,6 +137,12 @@ def _merge_partials(run, part, k: int):
 declare("serve:loop", "recompile_guard",
         note="steady-state serving must not re-trace/re-compile per call")
 
+# Hot-reload keeps the same requested slab_rows, so a reload re-plans to
+# the SAME fixed slab shapes — the swap must not invalidate the jit cache
+# (a reload that forced per-call recompiles would defeat live growth).
+declare("serve:loop", "recompile_guard",
+        note="hot-reload swap preserves slab shapes, hence the jit cache")
+
 # The observability contract: the spans instrumenting this engine (and the
 # pipeline stages above it) are host-side, strictly around the jit
 # boundaries — installing a repro.obs tracer must leave every hot jaxpr
@@ -144,29 +158,59 @@ class StreamingEngine:
 
     def __init__(self, store_or_layout, *, max_r: int, slab_rows: int = 1 << 18,
                  devices: Sequence | None = None, prefetch: bool = True):
-        if isinstance(store_or_layout, StoreLayout):
-            layout = store_or_layout
-            if layout.max_r != max_r:
-                raise ValueError(f"layout has max_r={layout.max_r}, "
-                                 f"engine asked for {max_r}")
-        else:
-            layout = StoreLayout.from_store(store_or_layout, max_r=max_r)
-        self.layout = layout
-        self.plan: SlabPlan = plan_slabs(layout.n_blocks, max_r=max_r,
-                                         slab_rows=slab_rows)
+        self.max_r = max_r
+        self._slab_rows_req = slab_rows
         self.devices = list(devices) if devices else None
         self._prefetch = prefetch
+        # _swap_lock makes the (layout, plan) pair swap atomically under
+        # reload(); _stats_lock serialises the read-modify-write on the
+        # cumulative totals when scheduler paths call search_encoded
+        # concurrently.
+        self._swap_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self.layout, self.plan = self._plan_for(store_or_layout)
         self.last_stats: StreamStats | None = None
         self.total_stats = TotalStats()
 
+    def _plan_for(self, store_or_layout) -> tuple[StoreLayout, SlabPlan]:
+        if isinstance(store_or_layout, StoreLayout):
+            layout = store_or_layout
+            if layout.max_r != self.max_r:
+                raise ValueError(f"layout has max_r={layout.max_r}, "
+                                 f"engine asked for {self.max_r}")
+        else:
+            layout = StoreLayout.from_store(store_or_layout, max_r=self.max_r)
+        plan = plan_slabs(layout.n_blocks, max_r=self.max_r,
+                          slab_rows=self._slab_rows_req)
+        return layout, plan
+
+    def reload(self, store_or_layout) -> None:
+        """Re-plan over a grown store and swap (layout, plan) in atomically.
+
+        In-flight ``search_encoded`` calls finish on the snapshot they took
+        at entry (append-only shard files keep old mmaps valid); calls that
+        start after the swap are bit-identical to a cold start on the grown
+        store. Same requested ``slab_rows`` => same slab shapes => the jit
+        cache survives the swap."""
+        layout, plan = self._plan_for(store_or_layout)
+        with self._swap_lock:
+            self.layout = layout
+            self.plan = plan
+
+    def _snapshot(self) -> tuple[StoreLayout, SlabPlan]:
+        with self._swap_lock:
+            return self.layout, self.plan
+
     def _set_stats(self, st: StreamStats) -> None:
-        self.last_stats = st
-        self.total_stats.add(st)
+        with self._stats_lock:
+            self.last_stats = st
+            self.total_stats.add(st)
 
     def reset_stats(self) -> None:
         """Zero the cumulative totals and clear the per-call snapshot."""
-        self.last_stats = None
-        self.total_stats = TotalStats()
+        with self._stats_lock:
+            self.last_stats = None
+            self.total_stats = TotalStats()
 
     # ------------------------------------------------------------------
     def _device_for(self, j: int):
@@ -181,12 +225,27 @@ class StreamingEngine:
         return cache[device]
 
     # ------------------------------------------------------------------
-    def _slab_real_rows(self, s: int) -> int:
+    @staticmethod
+    def _slab_real_rows(layout: StoreLayout, plan: SlabPlan, s: int) -> int:
         """Non-padding layout rows slab ``s`` reads from the store shards."""
-        b0 = s * self.plan.slab_blocks
-        b1 = min(b0 + self.plan.slab_blocks, self.layout.n_blocks)
-        return self.layout.real_rows(b0 * self.plan.max_r,
-                                     b1 * self.plan.max_r)
+        b0 = s * plan.slab_blocks
+        b1 = min(b0 + plan.slab_blocks, layout.n_blocks)
+        return layout.real_rows(b0 * plan.max_r, b1 * plan.max_r)
+
+    @staticmethod
+    def _drain_prefetch(pool, nxt) -> None:
+        """Tear down the double-buffer without leaking the in-flight fetch:
+        cancel it if it has not started, otherwise retrieve its outcome so
+        no mmap-reading thread outlives the scan and no exception goes
+        unretrieved. On the clean path ``nxt`` is already None."""
+        if pool is None:
+            return
+        if nxt is not None and not nxt.cancel():
+            try:
+                nxt.result()
+            except BaseException:
+                pass
+        pool.shutdown(wait=False)
 
     def search_encoded(self, q_hvs, q_pmz, q_charge, params: SearchParams, *,
                        dim: int, q_pmz_np: np.ndarray | None = None,
@@ -196,7 +255,8 @@ class StreamingEngine:
         ``params.prefix_words > 0`` the slab scan runs as the two-stage
         dimension cascade (prefix-word slab reads + full-width survivor
         fetches) — still bit-identical in exact mode."""
-        validate_search_params(params, self.layout.n_rows)
+        layout, plan = self._snapshot()
+        validate_search_params(params, layout.n_rows)
         if params.prefix_words:
             validate_prefix_words(params, dim)
         Q, K = q_hvs.shape[0], params.top_k
@@ -204,11 +264,11 @@ class StreamingEngine:
         qc_np = np.asarray(q_charge if q_charge_np is None else q_charge_np)
 
         if params.exhaustive:   # the HyperOMS baseline scans everything
-            touched = list(range(self.plan.n_slabs))
+            touched = list(range(plan.n_slabs))
         else:
             touched = np.flatnonzero(slabs_touched(
-                self.layout, qp_np, qc_np, open_tol_da=params.open_tol_da,
-                plan=self.plan)).tolist()
+                layout, qp_np, qc_np, open_tol_da=params.open_tol_da,
+                plan=plan)).tolist()
 
         gather, unpad = sort_pad_plan(q_pmz, q_charge, params.q_block,
                                       q_charge_np=qc_np)
@@ -217,13 +277,13 @@ class StreamingEngine:
         with span("serve.scan", queries=Q, slabs=len(touched),
                   mode="prefix" if params.prefix_words else "full") as sp:
             if params.prefix_words:
-                run = self._scan_prefix(touched, qh, qp, qc, params, dim,
-                                        qp_np, qc_np)
+                run, st = self._scan_prefix(layout, plan, touched, qh, qp, qc,
+                                            params, dim, qp_np, qc_np)
             else:
-                run = self._scan_full(touched, qh, qp, qc, params, dim)
-            st = self.last_stats
-            if st is not None:
-                sp.add(rows=st.scanned_rows, bytes=st.scanned_bytes)
+                run, st = self._scan_full(layout, plan, touched, qh, qp, qc,
+                                          params, dim)
+            self._set_stats(st)
+            sp.add(rows=st.scanned_rows, bytes=st.scanned_bytes)
 
         if run is None:          # no slab intersects any query window
             z = np.full((Q, K), -1, np.int32)
@@ -234,39 +294,41 @@ class StreamingEngine:
         unpad_np = np.asarray(unpad)
         std_b, std_row, open_b, open_row = (np.asarray(x)[unpad_np]
                                             for x in run)
-        std = self._finalize(std_b, std_row, params.min_sim)
-        opn = self._finalize(open_b, open_row, params.min_sim)
+        std = self._finalize(layout, std_b, std_row, params.min_sim)
+        opn = self._finalize(layout, open_b, open_row, params.min_sim)
         return SearchResult(std_idx=std[0], std_sim=std[1],
                             open_idx=opn[0], open_sim=opn[1],
                             std_row=std[2], open_row=opn[2])
 
-    def _scan_full(self, touched, qh, qp, qc, params: SearchParams, dim: int):
+    def _scan_full(self, layout: StoreLayout, plan: SlabPlan, touched,
+                   qh, qp, qc, params: SearchParams, dim: int):
         """Full-width slab loop (the original streaming path)."""
         K = params.top_k
         local = params._replace(
-            k_blocks=min(params.k_blocks, self.plan.slab_blocks))
-        W = self.layout.n_words
+            k_blocks=min(params.k_blocks, plan.slab_blocks))
+        W = layout.n_words
         rows_read = 0
         run = None
         merge_dev = self.devices[0] if self.devices else None
         qcache: dict = {}
         pool = ThreadPoolExecutor(max_workers=1) if (
             self._prefetch and len(touched) > 1) else None
+        nxt = None
         try:
-            nxt = (pool.submit(slab_arrays, self.layout, touched[0], self.plan)
-                   if pool else None)
+            if pool:
+                nxt = pool.submit(slab_arrays, layout, touched[0], plan)
             for j, s in enumerate(touched):
                 with span("serve.slab.fetch", slab=s):
                     db_np = nxt.result() if nxt else slab_arrays(
-                        self.layout, s, self.plan)
+                        layout, s, plan)
                 if pool and j + 1 < len(touched):
                     # double buffer: gather slab j+1 from the mmapped shards
                     # while the device searches slab j
-                    nxt = pool.submit(slab_arrays, self.layout,
-                                      touched[j + 1], self.plan)
+                    nxt = pool.submit(slab_arrays, layout, touched[j + 1],
+                                      plan)
                 else:
                     nxt = None
-                n_real = self._slab_real_rows(s)
+                n_real = self._slab_real_rows(layout, plan, s)
                 rows_read += n_real
                 with span("serve.slab.search", slab=s, rows=n_real,
                           bytes=n_real * W * 4):
@@ -278,23 +340,20 @@ class StreamingEngine:
                     out = _search_sorted_padded(db_dev, qh_d, qp_d, qc_d,
                                                 params=local, dim=dim)
                 with span("serve.slab.merge", slab=s):
-                    part = _offset_rows(*out,
-                                        np.int32(s * self.plan.slab_rows))
+                    part = _offset_rows(*out, np.int32(s * plan.slab_rows))
                     if merge_dev is not None:
                         part = jax.device_put(part, merge_dev)
                     run = (part if run is None
                            else _merge_partials(run, part, K))
         finally:
-            if pool:
-                pool.shutdown(wait=False)
-        self._set_stats(StreamStats(self.plan.n_slabs, len(touched),
-                                    self.plan.slab_rows,
-                                    scanned_rows=rows_read,
-                                    scanned_bytes=rows_read * W * 4))
-        return run
+            self._drain_prefetch(pool, nxt)
+        st = StreamStats(plan.n_slabs, len(touched), plan.slab_rows,
+                         scanned_rows=rows_read,
+                         scanned_bytes=rows_read * W * 4)
+        return run, st
 
-    def _scan_prefix(self, touched, qh, qp, qc, params: SearchParams,
-                     dim: int, qp_np, qc_np):
+    def _scan_prefix(self, layout: StoreLayout, plan: SlabPlan, touched,
+                     qh, qp, qc, params: SearchParams, dim: int, qp_np, qc_np):
         """Dimension-cascade slab loop: seed pass for exact thresholds, a
         prefix-words read+scan per touched slab, full-width fetch + exact
         rescore of the survivors, fold into the running winners.
@@ -303,27 +362,36 @@ class StreamingEngine:
         the full-width path only — the cascade's per-slab survivor sync is
         inherently sequential)."""
         p = params
-        K, P, W = p.top_k, p.prefix_words, self.layout.n_words
-        local = p._replace(k_blocks=min(p.k_blocks, self.plan.slab_blocks))
+        K, P, W = p.top_k, p.prefix_words, layout.n_words
+        local = p._replace(k_blocks=min(p.k_blocks, plan.slab_blocks))
         rows_read = 0
         bytes_read = 0
 
         def rescore(rows_np: np.ndarray):
-            """Exact dual-window top-k over global layout rows (full width)."""
-            bucket = row_bucket(rows_np.shape[0])
+            """Exact dual-window top-k over global layout rows (full width).
+
+            Only the REAL candidate rows are gathered from the store; the
+            pow2 bucket padding is zero-filled host-side (padding rows are
+            masked out via the PAD sidecars, so their HV content never
+            reaches a selected result) — the store reads are therefore
+            exactly the rows the byte meter charges for."""
+            n = rows_np.shape[0]
+            bucket = row_bucket(n)
             rows_pad, valid = pad_candidate_rows(rows_np, bucket)
-            r_hvs = jnp.asarray(self.layout.gather_rows(rows_pad))
-            r_pmz = jnp.asarray(np.where(valid, self.layout.pmz[rows_pad],
+            hv = np.zeros((bucket, W), np.uint32)
+            hv[:n] = layout.gather_rows(rows_np)
+            r_hvs = jnp.asarray(hv)
+            r_pmz = jnp.asarray(np.where(valid, layout.pmz[rows_pad],
                                          np.float32(np.finfo(np.float32).max)))
             r_charge = jnp.asarray(np.where(
-                valid, self.layout.charge[rows_pad], -1).astype(np.int32))
+                valid, layout.charge[rows_pad], -1).astype(np.int32))
             r_rows = jnp.asarray(np.where(valid, rows_pad, -1).astype(np.int32))
             return _rescore_rows_padded(r_hvs, r_rows, r_pmz, r_charge,
                                         qh, qp, qc, params=p, dim=dim)
 
         Qp = qh.shape[0]
         neg = jnp.full((Qp,), _NEG_THRESHOLD, jnp.int32)
-        seed_rows = plan_seed_rows(self.layout.pmz, self.layout.charge,
+        seed_rows = plan_seed_rows(layout.pmz, layout.charge,
                                    qp_np, qc_np, p.prefix_seed_da)
         if seed_rows.size:
             with span("serve.seed", rows=int(seed_rows.size),
@@ -338,19 +406,18 @@ class StreamingEngine:
         pool = ThreadPoolExecutor(max_workers=1) if (
             self._prefetch and len(touched) > 1) else None
         slab_p = partial(slab_arrays, n_words=P)
+        nxt = None
         try:
-            nxt = (pool.submit(slab_p, self.layout, touched[0], self.plan)
-                   if pool else None)
+            if pool:
+                nxt = pool.submit(slab_p, layout, touched[0], plan)
             for j, s in enumerate(touched):
                 with span("serve.slab.fetch", slab=s):
-                    db_np = nxt.result() if nxt else slab_p(
-                        self.layout, s, self.plan)
+                    db_np = nxt.result() if nxt else slab_p(layout, s, plan)
                 if pool and j + 1 < len(touched):
-                    nxt = pool.submit(slab_p, self.layout, touched[j + 1],
-                                      self.plan)
+                    nxt = pool.submit(slab_p, layout, touched[j + 1], plan)
                 else:
                     nxt = None
-                n_real = self._slab_real_rows(s)
+                n_real = self._slab_real_rows(layout, plan, s)
                 rows_read += n_real
                 bytes_read += n_real * P * 4
                 with span("serve.slab.search", slab=s, rows=n_real,
@@ -369,7 +436,7 @@ class StreamingEngine:
                     surv = np.flatnonzero(np.asarray(flags))
                 if surv.size == 0:
                     continue
-                surv_global = surv + s * self.plan.slab_rows
+                surv_global = surv + s * plan.slab_rows
                 rows_read += surv.size
                 bytes_read += surv.size * W * 4
                 with span("serve.slab.merge", slab=s,
@@ -378,8 +445,7 @@ class StreamingEngine:
                     run = (part if run is None
                            else _merge_partials(run, part, K))
         finally:
-            if pool:
-                pool.shutdown(wait=False)
+            self._drain_prefetch(pool, nxt)
 
         if p.prefix_margin >= 0 and seed_rows.size:
             # Margin mode may prune true winners; folding the seed-pass
@@ -389,17 +455,18 @@ class StreamingEngine:
             # LOWER row from an earlier slab — so exact mode must not.)
             part = rescore(seed_rows)
             run = part if run is None else _merge_partials(run, part, K)
+            rows_read += seed_rows.size
+            bytes_read += seed_rows.size * W * 4
 
-        self._set_stats(StreamStats(self.plan.n_slabs, len(touched),
-                                    self.plan.slab_rows,
-                                    scanned_rows=rows_read,
-                                    scanned_bytes=bytes_read))
-        return run
+        st = StreamStats(plan.n_slabs, len(touched), plan.slab_rows,
+                         scanned_rows=rows_read, scanned_bytes=bytes_read)
+        return run, st
 
-    def _finalize(self, best, row, min_sim):
+    @staticmethod
+    def _finalize(layout: StoreLayout, best, row, min_sim):
         """Host mirror of ``oms_search``'s finalize: min-sim threshold, map
         padded rows to original library indices (padding rows carry -1)."""
-        orig, n = self.layout.orig_idx, self.layout.n_rows
+        orig, n = layout.orig_idx, layout.n_rows
         ok = (best >= min_sim) & (row >= 0)
         idx = np.where(ok, orig[np.clip(row, 0, n - 1)], -1)
         ok = ok & (idx >= 0)

@@ -1,4 +1,4 @@
-"""Async micro-batching query frontend.
+"""Async micro-batching query frontend with SLO-aware admission.
 
 Request queue -> coalesce (up to ``max_batch`` requests, or ``max_wait_s``
 after the first arrival) -> ONE streamed scan serves the whole coalesced
@@ -8,6 +8,27 @@ answer — it only amortises the slab stream and the jit dispatch across
 concurrent callers, which is where the throughput of a heavy-traffic serve
 loop comes from.
 
+On top of plain coalescing the batcher speaks SLOs:
+
+  * **deadline** — ``submit(spec, deadline_s=...)`` attaches a per-request
+    latency budget. Admission control sheds (fast-fails with
+    :class:`DeadlineExceeded`) a request whose deadline the current queue
+    depth cannot plausibly meet — the estimate is ``batches-ahead x
+    e2e-p50`` read from the batcher's own deterministic latency histogram,
+    so a cold batcher (no history) admits everything. An EMPTY queue also
+    always admits (the half-open probe): shed requests are never observed
+    into the histogram, so if everything shed on a stale/pessimistic
+    estimate the estimator could never recover — the probe request runs in
+    the very next batch and refreshes the history instead. A request that
+    was admitted but whose deadline expired while it sat in the queue is
+    fast-failed at dispatch instead of burning a scan on a dead answer.
+    Shedding never changes an admitted request's answer (searches are
+    batch-independent).
+  * **tenant** — ``submit(spec, tenant=...)`` names the traffic source;
+    requests queue per-tenant and batches are assembled round-robin across
+    tenants, so one chatty tenant cannot starve the others (per-tenant
+    FIFO order is preserved).
+
 The scheduler is engine-agnostic: it coalesces raw peak lists into one
 padded :class:`~repro.data.spectra.SpectraSet` and hands it to a
 ``run_batch`` callable (the launcher wires that to
@@ -16,11 +37,11 @@ padded :class:`~repro.data.spectra.SpectraSet` and hands it to a
 from __future__ import annotations
 
 import dataclasses
-import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future, InvalidStateError
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, NamedTuple, Sequence
 
 import numpy as np
 
@@ -37,6 +58,10 @@ class QuerySpec:
     intensity: np.ndarray  # (P,) f32
     pmz: float             # neutral precursor mass (Da)
     charge: int
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request was shed: its deadline cannot be (or was not) met."""
 
 
 def coalesce_queries(specs: Sequence[QuerySpec]) -> SpectraSet:
@@ -65,12 +90,21 @@ def coalesce_queries(specs: Sequence[QuerySpec]) -> SpectraSet:
 _CLOSE = object()
 
 
+class _Request(NamedTuple):
+    spec: QuerySpec
+    fut: Future
+    t_submit: float
+    deadline_s: float | None
+    tenant: str
+
+
 class MicroBatcher:
     """Thread-safe micro-batching front of a batched search function.
 
     ``run_batch(spectra: SpectraSet) -> Sequence[payload]`` must return one
     payload per batch row; each :meth:`submit` future resolves to its row's
-    payload (or to the batch's exception).
+    payload (or to the batch's exception — for a shed request, a
+    :class:`DeadlineExceeded`).
 
     Metrics (a :class:`repro.obs.Metrics` registry, own or shared via the
     ``metrics`` argument):
@@ -79,11 +113,17 @@ class MicroBatcher:
         request (how long coalescing held the query);
       * ``e2e_latency_s``  — histogram: submit -> future-resolution latency
         per request, observed exactly once per future — including futures
-        the caller cancelled and batches that errored;
+        the caller cancelled and batches that errored. Shed requests are
+        NOT observed (they never ran), so the histogram keeps estimating
+        the latency of requests that actually reach the engine;
       * ``batch_size``     — histogram: coalesced requests per dispatched
         batch (``close()`` flushes the final partial batch's observation);
       * ``queue_depth``    — gauge: requests enqueued but not yet pulled
-        into a batch (``.max`` is the session high-water mark).
+        into a batch (``.max`` is the session high-water mark);
+      * ``shed_admit``     — counter: requests rejected at submit because
+        the deadline estimate said the queue cannot meet them;
+      * ``shed_expired``   — counter: admitted requests fast-failed at
+        dispatch because their deadline passed while queued.
     """
 
     def __init__(self, run_batch: Callable[[SpectraSet], Sequence[Any]], *,
@@ -94,10 +134,15 @@ class MicroBatcher:
         self._run_batch = run_batch
         self._max_batch = max_batch
         self._max_wait = max(0.0, max_wait_s)
-        self._queue: queue.Queue = queue.Queue()
+        # Per-tenant FIFO queues + a round-robin rotation of tenant names;
+        # _cond guards both and wakes the worker on submit/close.
+        self._cond = threading.Condition()
+        self._queues: dict[str, deque] = {}
+        self._rr: deque = deque()
+        self._closing = False
         self._closed = False
         # Guards the closed-check + enqueue pair: without it a submit racing
-        # close() could land behind the _CLOSE sentinel and never resolve.
+        # close() could land behind the close flag and never resolve.
         self._submit_lock = threading.Lock()
         self.n_batches = 0
         self.n_queries = 0
@@ -107,18 +152,58 @@ class MicroBatcher:
         self.batch_sizes = self.metrics.histogram("batch_size",
                                                   DEFAULT_SIZE_BUCKETS)
         self.queue_depth = self.metrics.gauge("queue_depth")
+        self.shed_admit = self.metrics.counter("shed_admit")
+        self.shed_expired = self.metrics.counter("shed_expired")
         self._thread = threading.Thread(target=self._worker,
                                         name="oms-microbatch", daemon=True)
         self._thread.start()
 
     # ------------------------------------------------------------------
-    def submit(self, spec: QuerySpec) -> Future:
+    def estimate_latency_s(self) -> float:
+        """Admission estimate for a request submitted NOW: the batches that
+        must dispatch before it can resolve (everything queued ahead plus
+        its own) times the observed e2e p50. Deterministic (fixed-bucket
+        histogram) and deliberately cheap; 0.0 while there is no latency
+        history yet, so a cold batcher never sheds."""
+        p50 = self.e2e_latency.p50
+        if p50 <= 0.0:
+            return 0.0
+        batches_ahead = 1 + int(self.queue_depth.value) // self._max_batch
+        return batches_ahead * p50
+
+    def submit(self, spec: QuerySpec, *, deadline_s: float | None = None,
+               tenant: str = "default") -> Future:
+        """Enqueue one query; returns a Future resolving to its payload.
+
+        ``deadline_s`` is a latency budget measured from this call; a
+        request the estimator predicts cannot meet it resolves immediately
+        with :class:`DeadlineExceeded` (fast-fail — the caller finds out in
+        microseconds, not after the deadline already blew)."""
         fut: Future = Future()
         with self._submit_lock:
             if self._closed:
                 raise RuntimeError("MicroBatcher is closed")
+            # Empty queue => always admit (half-open probe): only admitted
+            # requests feed the latency histogram, so shedding on stale
+            # history with nothing queued would lock the estimator into
+            # shedding forever after one slow (e.g. cold-compile) batch.
+            if deadline_s is not None and int(self.queue_depth.value) > 0:
+                est = self.estimate_latency_s()
+                if est > deadline_s:
+                    self.shed_admit.inc()
+                    fut.set_exception(DeadlineExceeded(
+                        f"shed at admission: estimated latency {est:.4f}s "
+                        f"exceeds deadline {deadline_s:.4f}s"))
+                    return fut
             self.queue_depth.inc()
-            self._queue.put((spec, fut, time.monotonic()))
+            req = _Request(spec, fut, time.monotonic(), deadline_s, tenant)
+            with self._cond:
+                q = self._queues.get(tenant)
+                if q is None:
+                    q = self._queues[tenant] = deque()
+                    self._rr.append(tenant)
+                q.append(req)
+                self._cond.notify()
         return fut
 
     def close(self) -> None:
@@ -126,7 +211,9 @@ class MicroBatcher:
         with self._submit_lock:
             if not self._closed:
                 self._closed = True
-                self._queue.put(_CLOSE)
+                with self._cond:
+                    self._closing = True
+                    self._cond.notify()
         self._thread.join()
 
     def __enter__(self) -> "MicroBatcher":
@@ -136,22 +223,44 @@ class MicroBatcher:
         self.close()
 
     # ------------------------------------------------------------------
+    def _pop(self, timeout: float | None = None):
+        """Next request, round-robin across tenants (each pop advances the
+        rotation, so tenant A's backlog cannot starve tenant B). Returns
+        ``None`` on timeout, ``_CLOSE`` once closing AND fully drained."""
+        end = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while True:
+                for _ in range(len(self._rr)):
+                    t = self._rr[0]
+                    self._rr.rotate(-1)
+                    q = self._queues[t]
+                    if q:
+                        return q.popleft()
+                if self._closing:
+                    return _CLOSE
+                if end is None:
+                    self._cond.wait()
+                else:
+                    remaining = end - time.monotonic()
+                    if remaining <= 0:
+                        return None
+                    self._cond.wait(remaining)
+
     def _worker(self) -> None:
         while True:
-            item = self._queue.get()
-            if item is _CLOSE:
+            first = self._pop()
+            if first is _CLOSE:
                 return
             self.queue_depth.dec()
-            batch = [item]
+            batch = [first]
             deadline = time.monotonic() + self._max_wait
             saw_close = False
             while len(batch) < self._max_batch:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     break
-                try:
-                    nxt = self._queue.get(timeout=remaining)
-                except queue.Empty:
+                nxt = self._pop(timeout=remaining)
+                if nxt is None:
                     break
                 if nxt is _CLOSE:
                     saw_close = True
@@ -180,24 +289,40 @@ class MicroBatcher:
 
     def _dispatch(self, batch) -> None:
         t0 = time.monotonic()
-        specs = [spec for spec, _, _ in batch]
-        futures = [fut for _, fut, _ in batch]
-        submits = [t for _, _, t in batch]
-        self.batch_sizes.observe(len(batch))
-        for t in submits:
-            self.queue_wait.observe(t0 - t)
+        # Fast-fail admitted requests whose deadline already passed while
+        # they waited — scanning for them would only delay the live ones.
+        # (Not observed in e2e_latency: see the metrics docstring.)
+        live = []
+        for req in batch:
+            if (req.deadline_s is not None
+                    and t0 - req.t_submit > req.deadline_s):
+                self.shed_expired.inc()
+                try:
+                    req.fut.set_exception(DeadlineExceeded(
+                        f"deadline {req.deadline_s:.4f}s expired after "
+                        f"{t0 - req.t_submit:.4f}s in queue"))
+                except InvalidStateError:
+                    pass
+            else:
+                live.append(req)
+        if not live:
+            return
+        self.batch_sizes.observe(len(live))
+        for req in live:
+            self.queue_wait.observe(t0 - req.t_submit)
         try:
-            with span("serve.batch", n=len(batch)):
-                results = self._run_batch(coalesce_queries(specs))
-            if len(results) != len(batch):
+            with span("serve.batch", n=len(live)):
+                results = self._run_batch(
+                    coalesce_queries([r.spec for r in live]))
+            if len(results) != len(live):
                 raise RuntimeError(
                     f"run_batch returned {len(results)} results for a "
-                    f"{len(batch)}-query batch")
+                    f"{len(live)}-query batch")
         except BaseException as e:
-            for fut, t in zip(futures, submits):
-                self._resolve(fut, t, error=e)
+            for req in live:
+                self._resolve(req.fut, req.t_submit, error=e)
             return
         self.n_batches += 1
-        self.n_queries += len(batch)
-        for (fut, t), res in zip(zip(futures, submits), results):
-            self._resolve(fut, t, result=res)
+        self.n_queries += len(live)
+        for req, res in zip(live, results):
+            self._resolve(req.fut, req.t_submit, result=res)

@@ -138,17 +138,26 @@ class LibraryStore:
             raise
 
     def validate(self) -> None:
-        """Check shard files exist and row counts match the manifest."""
+        """Check shard files exist, EVERY sidecar's row count matches the
+        manifest, and the packed-HV word width matches ``dim/32``. A
+        truncated or width-mismatched sidecar would otherwise mis-gather
+        silently at serve time (headers only — no data pages are read)."""
+        W = self.n_words
         for s in self.shards:
             for part in _SIDECARS:
                 p = self._file(s.name, part)
                 if not os.path.exists(p):
                     raise StoreError(f"store shard file missing: {p}")
-            pmz = np.load(self._file(s.name, "pmz"), mmap_mode="r")
-            if pmz.shape[0] != s.rows:
-                raise StoreError(
-                    f"shard {s.name}: manifest says {s.rows} rows, "
-                    f"sidecar has {pmz.shape[0]}")
+                arr = np.load(p, mmap_mode="r")
+                if arr.shape[0] != s.rows:
+                    raise StoreError(
+                        f"shard {s.name}: manifest says {s.rows} rows, "
+                        f"{part} sidecar has {arr.shape[0]}")
+                if part == "hvs" and (arr.ndim != 2 or arr.shape[1] != W):
+                    got = arr.shape[1:] if arr.ndim > 1 else "scalar rows"
+                    raise StoreError(
+                        f"shard {s.name}: hvs width {got} != manifest "
+                        f"dim/32 = {W} words")
 
     # -- introspection ------------------------------------------------------
     def _file(self, name: str, part: str) -> str:
@@ -174,6 +183,15 @@ class LibraryStore:
         """Total on-disk payload (shard files, manifest excluded)."""
         return sum(os.path.getsize(self._file(s.name, part))
                    for s in self.shards for part in _SIDECARS)
+
+    @staticmethod
+    def manifest_token(path: str) -> tuple:
+        """Cheap change token for the store at ``path``: the manifest's
+        (mtime_ns, size). The manifest is committed by atomic rename, so a
+        token change means a fully-committed generation is visible — the
+        hot-reload watcher polls this without parsing JSON."""
+        st = os.stat(os.path.join(path, "manifest.json"))
+        return (st.st_mtime_ns, st.st_size)
 
     def config_fields(self) -> dict:
         return {k: self.manifest[k] for k in CONFIG_KEYS}

@@ -253,6 +253,44 @@ def test_streamed_prefix_meters_scanned_bytes(setup):
     assert s_pref.scanned_bytes < s_pref.scanned_rows * W * 4
 
 
+@pytest.mark.parametrize("margin", [None, 64])
+def test_streamed_prefix_byte_meter_is_exact(setup, monkeypatch, margin):
+    """The meter must equal the shard reads to the byte: spy every
+    ``read_hv_rows``/``gather_rows`` call and count the REAL rows (and
+    their word width) each one actually pulls. Regression for two
+    undercounts: the survivor rescore used to gather pow2-bucket-PADDED
+    row sets while metering only ``surv.size`` rows, and margin mode's
+    seed fold-back rescore was not metered at all."""
+    _, pipe, path, (hvs, qp, qc) = setup
+    sp = OMSPipeline.from_store(path, CFG, resident=False, slab_rows=97)
+    layout = sp.engine.layout
+    counted = {"rows": 0, "bytes": 0}
+    real_read = layout.read_hv_rows
+    real_gather = layout.gather_rows
+
+    def spy_read(lo, hi, n_words=None):
+        W = layout.n_words if n_words is None else n_words
+        n_real = int((layout.src_run[lo:hi] >= 0).sum())
+        counted["rows"] += n_real
+        counted["bytes"] += n_real * W * 4
+        return real_read(lo, hi, n_words=n_words)
+
+    def spy_gather(rows_padded, n_words=None):
+        W = layout.n_words if n_words is None else n_words
+        n_real = int((layout.src_run[np.asarray(rows_padded)] >= 0).sum())
+        counted["rows"] += n_real
+        counted["bytes"] += n_real * W * 4
+        return real_gather(rows_padded, n_words=n_words)
+
+    monkeypatch.setattr(layout, "read_hv_rows", spy_read)
+    monkeypatch.setattr(layout, "gather_rows", spy_gather)
+    sp.search_encoded(hvs, qp, qc, prefix_words=PREFIX, prefix_margin=margin)
+    st = sp.engine.last_stats
+    assert counted["rows"] > 0
+    assert st.scanned_rows == counted["rows"]
+    assert st.scanned_bytes == counted["bytes"]
+
+
 def test_streamed_margin_mode_runs(setup):
     """Inexact margin on the streamed path: well-formed rows, seeds folded
     back in (results at least as good as the seed pass)."""

@@ -17,9 +17,9 @@ from repro.core import OMSConfig, OMSPipeline
 from repro.core.blocking import LibraryRun, build_reference_db_from_runs
 from repro.core.search import SearchParams, oms_search
 from repro.data.spectra import LibraryConfig, make_dataset
-from repro.serve import (MicroBatcher, QuerySpec, StoreLayout,
-                         StreamingEngine, coalesce_queries, plan_slabs,
-                         slabs_touched)
+from repro.serve import (DeadlineExceeded, MicroBatcher, QuerySpec,
+                         StoreLayout, StreamingEngine, coalesce_queries,
+                         plan_slabs, slabs_touched)
 
 # n_queries=40 with charges {2,3} puts a charge boundary mid-q-block — the
 # regression dataset for the plan_search charge-run-local grouping fix.
@@ -461,3 +461,443 @@ def test_coalesce_pads_variable_peak_lists():
     assert batch.mz.shape == (2, 5)
     assert (np.asarray(batch.intensity)[0, 2:] == 0).all()   # padding
     assert np.asarray(batch.pmz).tolist() == [10.0, 20.0]
+
+
+# ---------------------------------------------------------------------------
+# Prefetch lifecycle: a scan that dies mid-loop must not leak the in-flight
+# double-buffer fetch (regression: the future was abandoned un-retrieved)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["full", "prefix"])
+def test_scan_error_drains_inflight_prefetch(setup, monkeypatch, mode):
+    """When the slab loop raises while slab j+1 is being prefetched,
+    ``search_encoded`` must retrieve (or cancel) that future before
+    propagating — no shard-reading thread may outlive the call and no
+    fetch exception may go unretrieved. Pre-fix the exception propagated
+    immediately with the fetch still running, so the observed order was
+    raise-then-fetch-completion; post-fix it must be the reverse."""
+    import threading
+
+    from repro.serve import engine as engine_mod
+
+    ds, pipe, store, (hvs, qp, qc) = setup
+    eng = StreamingEngine(store, max_r=CFG.max_r, slab_rows=64)
+    kw = {"top_k": 2} if mode == "full" else {"top_k": 2, "prefix_words": 4}
+    params = pipe.search_params(qp, qc, **kw)
+
+    real = engine_mod.slab_arrays
+    release = threading.Event()
+    started2 = threading.Event()
+    state = {"fetches": 0}
+    events = []                         # completion order: the regression
+
+    def slow_slab_arrays(layout, s, plan, n_words=None):
+        state["fetches"] += 1
+        if state["fetches"] == 2:       # the prefetched (in-flight) slab
+            started2.set()
+            release.wait(10)
+            events.append("fetch2_done")
+        return real(layout, s, plan, n_words=n_words)
+
+    def boom(layout, plan, s):
+        assert started2.wait(10)        # prefetch provably in flight
+        raise RuntimeError("mid-scan failure")
+
+    monkeypatch.setattr(engine_mod, "slab_arrays", slow_slab_arrays)
+    monkeypatch.setattr(StreamingEngine, "_slab_real_rows",
+                        staticmethod(boom))
+
+    def run_search():
+        with pytest.raises(RuntimeError, match="mid-scan failure"):
+            eng.search_encoded(hvs, qp, qc, params, dim=CFG.dim)
+        events.append("raised")
+
+    t = threading.Thread(target=run_search)
+    t.start()
+    assert started2.wait(10)
+    # Pre-fix the error escapes while fetch 2 is still blocked: this join
+    # succeeds and "raised" lands first. Post-fix search_encoded is parked
+    # in _drain_prefetch waiting on the fetch, so the join times out.
+    t.join(timeout=1.0)
+    release.set()
+    t.join(timeout=10.0)
+    assert not t.is_alive()
+    assert events == ["fetch2_done", "raised"]
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware scheduling: deadlines, shedding, per-tenant fairness
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_cold_batcher_admits_everything():
+    """No latency history => estimate 0.0 => nothing is shed at admission,
+    whatever the deadline."""
+    with MicroBatcher(lambda s: list(np.asarray(s.pmz)), max_batch=4,
+                      max_wait_s=0.0) as mb:
+        assert mb.estimate_latency_s() == 0.0
+        fut = mb.submit(_spec(3.0), deadline_s=5.0)
+        assert fut.result(timeout=30) == pytest.approx(3.0)
+    assert mb.shed_admit.value == 0 and mb.shed_expired.value == 0
+
+
+def test_deadline_admission_shed():
+    """With warmed latency history, a backlog, and an unmeetable deadline,
+    submit fast-fails with DeadlineExceeded without reaching the engine —
+    and the shed request is NOT observed into the e2e histogram (it never
+    ran, so it must not drag the estimator toward zero)."""
+    import threading
+
+    release = threading.Event()
+    ran = []
+
+    def run_batch(spectra):
+        release.wait(10)
+        ran.append(spectra.pmz.shape[0])
+        return list(np.asarray(spectra.pmz))
+
+    with MicroBatcher(run_batch, max_batch=1, max_wait_s=0.0) as mb:
+        blocker = mb.submit(_spec(1.0))     # occupies the worker
+        queued = mb.submit(_spec(2.0))      # queue_depth now 1
+        mb.e2e_latency.observe(0.5)         # warmed history: p50 bucket 0.5s
+        assert mb.estimate_latency_s() >= 0.5
+        doomed = mb.submit(_spec(3.0), deadline_s=0.01)
+        with pytest.raises(DeadlineExceeded, match="shed at admission"):
+            doomed.result(timeout=30)
+        ok = mb.submit(_spec(4.0), deadline_s=60.0)   # meetable deadline
+        release.set()
+        assert blocker.result(timeout=30) == pytest.approx(1.0)
+        assert queued.result(timeout=30) == pytest.approx(2.0)
+        assert ok.result(timeout=30) == pytest.approx(4.0)
+    assert mb.shed_admit.value == 1 and mb.shed_expired.value == 0
+    assert ran == [1, 1, 1]             # only admitted requests ran
+    assert mb.e2e_latency.count == 4    # manual warm-up + 3 served, not doomed
+
+
+def test_admission_probe_on_empty_queue():
+    """Half-open probe: however pessimistic the latency history, a request
+    arriving at an EMPTY queue is always admitted. Shed requests are never
+    observed into the histogram, so without this probe one slow batch (a
+    cold compile, a GC pause) would lock the estimator into shedding
+    forever — the probe runs immediately and refreshes the history."""
+    with MicroBatcher(lambda s: list(np.asarray(s.pmz)), max_batch=4,
+                      max_wait_s=0.0) as mb:
+        mb.e2e_latency.observe(10.0)    # one awful batch in the history
+        assert mb.estimate_latency_s() >= 10.0
+        fut = mb.submit(_spec(7.0), deadline_s=0.05)   # est >> deadline
+        assert fut.result(timeout=30) == pytest.approx(7.0)
+    assert mb.shed_admit.value == 0 and mb.shed_expired.value == 0
+    # ... and the probe's observation is in the histogram for recovery
+    assert mb.e2e_latency.count == 2
+
+
+def test_deadline_expired_in_queue_shed():
+    """An admitted request whose deadline passes while it waits behind a
+    slow batch is fast-failed at dispatch instead of burning a scan."""
+    import threading
+    import time
+
+    release = threading.Event()
+    served = []
+
+    def run_batch(spectra):
+        release.wait(10)
+        served.extend(float(p) for p in np.asarray(spectra.pmz))
+        return list(np.asarray(spectra.pmz))
+
+    with MicroBatcher(run_batch, max_batch=1, max_wait_s=0.0) as mb:
+        blocker = mb.submit(_spec(1.0))               # occupies the worker
+        doomed = mb.submit(_spec(2.0), deadline_s=0.01)
+        time.sleep(0.1)                               # deadline blows queued
+        release.set()
+        assert blocker.result(timeout=30) == pytest.approx(1.0)
+        with pytest.raises(DeadlineExceeded, match="expired"):
+            doomed.result(timeout=30)
+    assert mb.shed_expired.value == 1 and mb.shed_admit.value == 0
+    assert served == [1.0]              # the expired request never ran
+    assert mb.e2e_latency.count == 1    # shed-at-dispatch not observed
+    assert mb.queue_depth.value == 0
+
+
+def test_tenant_round_robin_fairness():
+    """Batches are assembled round-robin across tenants: a 4-deep "bulk"
+    backlog submitted FIRST cannot starve a later 2-request "interactive"
+    tenant, while per-tenant FIFO order is preserved."""
+    import threading
+
+    release = threading.Event()
+    order = []
+
+    def run_batch(spectra):
+        release.wait(10)
+        order.extend(float(p) for p in np.asarray(spectra.pmz))
+        return list(np.asarray(spectra.pmz))
+
+    with MicroBatcher(run_batch, max_batch=1, max_wait_s=0.0) as mb:
+        futs = [mb.submit(_spec(0.0))]                # occupies the worker
+        for i in range(4):
+            futs.append(mb.submit(_spec(10.0 + i), tenant="bulk"))
+        for i in range(2):
+            futs.append(mb.submit(_spec(20.0 + i), tenant="interactive"))
+        release.set()
+        for f in futs:
+            f.result(timeout=30)
+    pos = {p: i for i, p in enumerate(order)}
+    assert pos[10.0] < pos[11.0] < pos[12.0] < pos[13.0]   # FIFO per tenant
+    assert pos[20.0] < pos[21.0]
+    # round-robin: both interactive requests land before bulk's tail
+    assert pos[21.0] < pos[13.0]
+    assert mb.n_queries == 7
+
+
+# ---------------------------------------------------------------------------
+# HV-keyed result cache
+# ---------------------------------------------------------------------------
+
+
+def _payloads(r, n):
+    """The launcher's per-query response payloads, serialized exactly like
+    its JSON-lines loop (sorted keys, tight separators) — byte-comparable."""
+    import json
+
+    std_i = np.asarray(r.std_idx); std_s = np.asarray(r.std_sim)
+    opn_i = np.asarray(r.open_idx); opn_s = np.asarray(r.open_sim)
+    return [json.dumps(
+        {"std": {"idx": std_i[i].tolist(), "sim": std_s[i].tolist()},
+         "open": {"idx": opn_i[i].tolist(), "sim": opn_s[i].tolist()}},
+        sort_keys=True, separators=(",", ":")).encode()
+        for i in range(n)]
+
+
+def test_result_cache_keys_lru_and_counters():
+    from repro.obs import Metrics
+    from repro.serve import ResultCache
+
+    reg = Metrics()
+    cache = ResultCache(2, metrics=reg)
+    hv = np.arange(16, dtype=np.uint32)
+    k1 = ResultCache.key(hv, 500.0, 2)
+    assert k1 == ResultCache.key(hv.copy(), 500.0, 2)       # deterministic
+    k2 = ResultCache.key(hv, 500.0, 3)                      # charge differs
+    k3 = ResultCache.key(hv, 500.25, 2)                     # pmz differs
+    k4 = ResultCache.key(hv, 500.0, 2, "cascade")           # params differ
+    assert len({k1, k2, k3, k4}) == 4
+
+    assert cache.get(k1) is None                            # miss
+    cache.put(k1, b"r1")
+    cache.put(k2, b"r2")
+    assert cache.get(k1) == b"r1"                           # hit, LRU refresh
+    cache.put(k3, b"r3")                                    # evicts k2
+    assert cache.get(k2) is None                            # miss (evicted)
+    assert cache.get(k1) == b"r1" and cache.get(k3) == b"r3"
+    assert len(cache) == 2
+    cache.clear()                                           # hot-reload path
+    assert len(cache) == 0 and cache.get(k1) is None
+
+    snap = reg.snapshot()
+    assert snap["result_cache_hits"] == 3
+    assert snap["result_cache_misses"] == 3
+
+    with pytest.raises(ValueError, match="capacity"):
+        ResultCache(0)
+
+
+def test_result_cache_serve_byte_identity(setup):
+    """The launcher's cache-in-the-loop batch flow: repeated queries hit
+    the cache, new ones are searched as a SUBSET of the batch, and every
+    response byte-matches a cache-bypass run — the in-process version of
+    CI's ``--result-cache`` vs ``--no-result-cache`` comparison."""
+    import jax.numpy as jnp
+
+    from repro.obs import Metrics
+    from repro.serve import ResultCache
+
+    ds, pipe, store, _ = setup
+    mz = np.asarray(ds.queries.mz)
+    inten = np.asarray(ds.queries.intensity)
+    pmz = np.asarray(ds.queries.pmz)
+    charge = np.asarray(ds.queries.charge)
+
+    def spec_for(i):
+        keep = inten[i] > 0
+        return QuerySpec(mz=mz[i][keep], intensity=inten[i][keep],
+                         pmz=float(pmz[i]), charge=int(charge[i]))
+
+    reg = Metrics()
+    cache = ResultCache(64, metrics=reg)
+
+    def run_cached(spectra):
+        hvs, qp, qc = pipe.encode_queries(spectra)
+        hv_np, qp_np, qc_np = (np.asarray(hvs), np.asarray(qp),
+                               np.asarray(qc))
+        keys = [ResultCache.key(hv_np[i], float(qp_np[i]), int(qc_np[i]),
+                                "tok") for i in range(hv_np.shape[0])]
+        out = [cache.get(k) for k in keys]
+        miss = [i for i, p in enumerate(out) if p is None]
+        if miss:
+            sel = jnp.asarray(np.asarray(miss, np.int32))
+            fresh = _payloads(
+                pipe.search_encoded(hvs[sel], qp[sel], qc[sel],
+                                    top_k=2).result, len(miss))
+            for i, p in zip(miss, fresh):
+                out[i] = p
+                cache.put(keys[i], p)
+        return out
+
+    n = 8
+    batch = coalesce_queries([spec_for(i) for i in range(n)])
+    h0, p0, c0 = pipe.encode_queries(batch)
+    baseline = _payloads(pipe.search_encoded(h0, p0, c0, top_k=2).result, n)
+
+    assert run_cached(batch) == baseline                 # cold: all misses
+    assert run_cached(batch) == baseline                 # warm: all hits
+    # mixed batch — cached dupes interleaved with unseen queries: the miss
+    # subset is searched alone and spliced in without changing a byte
+    idx = [5, 8, 1, 9, 4]
+    mixed = coalesce_queries([spec_for(i) for i in idx])
+    h1, p1, c1 = pipe.encode_queries(mixed)
+    want = _payloads(pipe.search_encoded(h1, p1, c1, top_k=2).result,
+                     len(idx))
+    assert run_cached(mixed) == want
+
+    snap = reg.snapshot()
+    assert snap["result_cache_hits"] == n + 3            # warm pass + dupes
+    assert snap["result_cache_misses"] == n + 2          # cold pass + unseen
+
+
+# ---------------------------------------------------------------------------
+# Serve-mode cascade: per-query stage-1 gating is coalescing-independent
+# ---------------------------------------------------------------------------
+
+
+def test_cascade_serve_coalescing_independence(setup):
+    """``--cascade`` serving gates stage 1 PER QUERY (each query's FDR
+    decision sees only its own narrow matches), so batch composition can
+    never change an answer. Regression for the corpus-pooled stage-1 FDR,
+    which made a query's identification depend on its batch neighbours."""
+    ds, pipe, store, _ = setup
+    n = 10
+    mz = np.asarray(ds.queries.mz)[:n]
+    inten = np.asarray(ds.queries.intensity)[:n]
+    pmz = np.asarray(ds.queries.pmz)[:n]
+    charge = np.asarray(ds.queries.charge)[:n]
+
+    def run_batch(spectra):
+        out = pipe.search_cascade(spectra, narrow_tol_da=1.0, top_k=2,
+                                  stage1_per_query=True)
+        return _payloads(out.result, spectra.pmz.shape[0])
+
+    def spec_for(i):
+        keep = inten[i] > 0
+        return QuerySpec(mz=mz[i][keep], intensity=inten[i][keep],
+                         pmz=float(pmz[i]), charge=int(charge[i]))
+
+    rng = np.random.default_rng(13)
+    responses = {}
+    for max_batch in (1, 3, n):
+        for tag in range(2):
+            order = rng.permutation(n) if tag else np.arange(n)
+            with MicroBatcher(run_batch, max_batch=max_batch,
+                              max_wait_s=0.02) as mb:
+                futs = {int(q): mb.submit(spec_for(int(q))) for q in order}
+                responses[(max_batch, tag)] = {
+                    q: f.result(timeout=60) for q, f in futs.items()}
+
+    base = responses[(1, 0)]
+    assert len(base) == n
+    for key, got in responses.items():
+        for q in range(n):
+            assert got[q] == base[q], (key, q)
+
+
+# ---------------------------------------------------------------------------
+# Hot-reload of appended shards
+# ---------------------------------------------------------------------------
+
+
+def test_hot_reload_bitidentical_to_cold_restart(tmp_path):
+    """Grow the store with an appended shard, hot-reload the streaming
+    pipeline, and require bit-identity with BOTH a cold restart on the
+    grown store and the resident search — the acceptance criterion for
+    live library growth."""
+    from repro.store import LibraryStore
+
+    ds = make_dataset(LibraryConfig(n_refs=300, n_queries=24, seed=7))
+    grow = make_dataset(LibraryConfig(n_refs=180, n_queries=1, seed=8))
+    path = str(tmp_path / "store")
+    store = OMSPipeline.ingest(CFG, ds.refs, path, chunk_rows=128)
+    tok0 = LibraryStore.manifest_token(path)
+
+    stream = OMSPipeline.from_store(store, CFG, resident=False, slab_rows=96)
+    stream.search(ds.queries, top_k=2)          # serving before the growth
+
+    OMSPipeline.ingest(CFG, grow.refs, path, chunk_rows=128, append=True)
+    assert LibraryStore.manifest_token(path) != tok0   # the watch signal
+    n0, t0 = stream.engine.layout.n_rows, stream.n_targets
+    stream.reload_store(path)
+    assert stream.engine.layout.n_rows > n0
+    assert stream.n_targets > t0
+
+    got = stream.search(ds.queries, top_k=2)
+    cold = OMSPipeline.from_store(path, CFG, resident=False, slab_rows=96)
+    want = cold.search(ds.queries, top_k=2)
+    _assert_result_equal(want.result, got.result, ctx="hot vs cold restart")
+    resident = OMSPipeline.from_store(path, CFG).search(ds.queries, top_k=2)
+    _assert_result_equal(resident.result, got.result, ctx="hot vs resident")
+
+
+def test_hot_reload_requires_streaming_pipeline(setup):
+    ds, pipe, store, _ = setup                 # `pipe` is resident
+    with pytest.raises(RuntimeError, match="streaming"):
+        pipe.reload_store(store)
+
+
+def test_stats_threadsafe_under_concurrent_search_and_reload(setup):
+    """Searches racing reload(): every in-flight query finishes on its
+    entry snapshot (bit-identical answers, zero drops) and the cumulative
+    stats counters lose no updates."""
+    import threading
+
+    ds, pipe, store, (hvs, qp, qc) = setup
+    eng = StreamingEngine(store, max_r=CFG.max_r, slab_rows=96)
+    params = pipe.search_params(qp, qc, top_k=2)
+    want = oms_search(pipe.db, hvs, qp, qc, params, dim=CFG.dim)
+
+    eng.search_encoded(hvs, qp, qc, params, dim=CFG.dim)   # warm-up
+    per_rows = eng.last_stats.scanned_rows
+    per_slabs = eng.last_stats.n_scanned
+    assert per_rows > 0
+    eng.reset_stats()
+
+    K, M = 4, 3
+    errs = []
+    stop = threading.Event()
+
+    def hammer():
+        try:
+            for _ in range(M):
+                got = eng.search_encoded(hvs, qp, qc, params, dim=CFG.dim)
+                _assert_result_equal(want, got, ctx="under reload")
+        except BaseException as e:     # pragma: no cover - failure path
+            errs.append(e)
+
+    def reloader():
+        while not stop.is_set():
+            eng.reload(store)
+
+    threads = [threading.Thread(target=hammer) for _ in range(K)]
+    rl = threading.Thread(target=reloader)
+    rl.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    rl.join()
+
+    assert not errs
+    assert eng.total_stats.n_scans == K * M
+    assert eng.total_stats.scanned_rows == K * M * per_rows
+    assert eng.total_stats.slabs_scanned == K * M * per_slabs
+    assert eng.last_stats.scanned_rows == per_rows

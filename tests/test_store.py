@@ -144,6 +144,36 @@ def test_malformed_store_rejected(setup, tmp_path):
         LibraryStore.open(broken)
 
 
+@pytest.mark.parametrize("part", ["hvs", "charge", "decoy", "orig"])
+def test_truncated_sidecar_rejected_every_part(setup, tmp_path, part):
+    """validate() must check EVERY sidecar's row count, not just pmz — a
+    truncated hvs/charge/decoy/orig file would mis-gather silently at
+    serve time (regression: only pmz used to be checked)."""
+    import shutil
+    ds, pipe, path, store = setup
+    broken = str(tmp_path / f"broken_{part}")
+    shutil.copytree(path, broken)
+    s0 = store.shards[0].name
+    good = np.load(os.path.join(broken, f"{s0}.{part}.npy"))
+    np.save(os.path.join(broken, f"{s0}.{part}.npy"), good[:3])
+    with pytest.raises(StoreError, match=part):
+        LibraryStore.open(broken)
+
+
+def test_hv_width_mismatch_rejected(setup, tmp_path):
+    """A shard whose packed-HV width disagrees with manifest dim/32 must
+    fail validation even when its row count matches."""
+    import shutil
+    ds, pipe, path, store = setup
+    broken = str(tmp_path / "broken_width")
+    shutil.copytree(path, broken)
+    s0 = store.shards[0]
+    wrong = np.zeros((s0.rows, CFG.dim // 32 - 1), np.uint32)
+    np.save(os.path.join(broken, f"{s0.name}.hvs.npy"), wrong)
+    with pytest.raises(StoreError, match="width"):
+        LibraryStore.open(broken)
+
+
 def test_append_shard_validates_rows(setup, tmp_path):
     st = LibraryStore.create(str(tmp_path / "v"), dim=512, n_levels=16,
                              bin_size=0.05, mz_min=200.0, mz_max=2000.0,
